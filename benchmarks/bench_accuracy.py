@@ -1,0 +1,52 @@
+"""Paper Fig. 1e analogue: software vs fully-chip-measured accuracy across
+applications (synthetic datasets, relative claims — DESIGN.md section 6.4)."""
+import time
+
+import jax
+
+from repro.core.types import CIMConfig
+from repro.data import (cluster_images, binary_patterns, corrupt_flip)
+from repro.models import cnn7, rbm
+from repro.train.noisy import train, accuracy
+
+
+def run():
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    x, y = cluster_images(key, 448, hw=16)
+    xt, yt = cluster_images(jax.random.PRNGKey(99), 192, hw=16)
+    params = cnn7.init_full(jax.random.PRNGKey(1), x[:2])
+    params, _ = train(jax.random.PRNGKey(2), params, cnn7.apply, (x, y),
+                      steps=240, batch=64, noise_frac=0.15)
+    soft = float(accuracy(cnn7.apply(params, xt), yt))
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    states = cnn7.deploy(jax.random.PRNGKey(4), params, cfg, x[:24])
+    chip = float(accuracy(cnn7.chip_apply(states, params, xt[:128], cfg),
+                          yt[:128]))
+    rows = [("fig1e_cnn_software_acc", None, round(soft, 4)),
+            ("fig1e_cnn_chip_acc", None, round(chip, 4)),
+            ("fig1e_cnn_chip_gap", None, round(soft - chip, 4))]
+
+    # RBM image recovery (L2 error reduction)
+    PIX, NV, NH = 128, 138, 32
+    v = binary_patterns(jax.random.PRNGKey(5), 384, d=PIX, rank=4)
+    rp = rbm.init(jax.random.PRNGKey(6), n_vis=NV, n_hid=NH)
+    import jax as _jax
+    upd = _jax.jit(lambda k, p, vb: rbm.cd1_update(k, p, vb, lr=0.1,
+                                                   noise_frac=0.05))
+    for i in range(800):
+        k = jax.random.fold_in(jax.random.PRNGKey(7), i)
+        idx = jax.random.randint(k, (64,), 0, 384)
+        rp = upd(jax.random.fold_in(k, 1), rp, v[idx])
+    vt = binary_patterns(jax.random.PRNGKey(8), 64, d=PIX, rank=4)
+    v_c, mask = corrupt_flip(jax.random.PRNGKey(9), vt, 0.2, pixels=PIX)
+    cfg2 = CIMConfig(in_bits=2, out_bits=8)
+    chiprbm = rbm.deploy(jax.random.PRNGKey(10), rp, cfg2, v[:64])
+    rec = rbm.chip_gibbs_recover(jax.random.PRNGKey(11), chiprbm, cfg2, v_c,
+                                 mask, n_cycles=10)
+    e0 = float(rbm.l2_error(v_c[:, :PIX], vt[:, :PIX]))
+    e1 = float(rbm.l2_error(rec[:, :PIX], vt[:, :PIX]))
+    rows.append(("fig1e_rbm_l2_err_reduction_pct", None,
+                 round(100 * (1 - e1 / e0), 1)))
+    us = (time.time() - t0) * 1e6 / len(rows)
+    return [(n, round(us, 0), d) for n, _, d in rows]

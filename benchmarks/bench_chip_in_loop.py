@@ -1,0 +1,43 @@
+"""Paper Fig. 3f: chip-in-the-loop progressive fine-tuning — accuracy with vs
+without fine-tuning under non-linear (IR drop) non-idealities."""
+import time
+
+import jax
+
+from repro.core.types import CIMConfig, NonIdealityConfig
+from repro.data import cluster_images
+from repro.models import cnn7
+from repro.train.noisy import train, accuracy
+from repro.train.chip_in_loop import progressive_finetune
+
+
+def run():
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    x, y = cluster_images(key, 256, hw=12)
+    xt, yt = cluster_images(jax.random.PRNGKey(99), 128, hw=12)
+    params = cnn7.init_full(jax.random.PRNGKey(1), x[:2])
+    params, _ = train(jax.random.PRNGKey(2), params, cnn7.apply, (x, y),
+                      steps=120, batch=64, noise_frac=0.1)
+    cfg = CIMConfig(in_bits=4, out_bits=8,
+                    nonideal=NonIdealityConfig(ir_drop_alpha=4e-5,
+                                               adc_offset_sigma=0.004))
+    s0 = cnn7.deploy_upto(jax.random.fold_in(jax.random.PRNGKey(5), 0),
+                          params, cfg, x[:24], cnn7.N_STAGES)
+    acc0 = float(accuracy(cnn7.chip_prefix(s0, params, xt, cnn7.N_STAGES,
+                                           cfg), yt))
+    states, ftp, _ = progressive_finetune(
+        jax.random.PRNGKey(5), dict(params), cfg, x[:192], y[:192],
+        deploy_upto=lambda k, p, c, xc, u: cnn7.deploy_upto(k, p, c, xc, u),
+        chip_prefix=lambda s, p, xx, u: cnn7.chip_prefix(s, p, xx, u, cfg),
+        soft_suffix=cnn7.soft_suffix, n_stages=cnn7.N_STAGES,
+        noise_frac=0.1, ft_steps=25, lr=5e-4)
+    acc1 = float(accuracy(cnn7.chip_prefix(states, ftp, xt, cnn7.N_STAGES,
+                                           cfg), yt))
+    rows = [
+        ("fig3f_chip_acc_no_finetune", None, round(acc0, 4)),
+        ("fig3f_chip_acc_with_finetune", None, round(acc1, 4)),
+        ("fig3f_finetune_gain", None, round(acc1 - acc0, 4)),
+    ]
+    us = (time.time() - t0) * 1e6 / len(rows)
+    return [(n, round(us, 0), d) for n, _, d in rows]

@@ -1,0 +1,28 @@
+"""Paper Fig. 1d + Extended Data Fig. 10: EDP vs prior art, energy/op and
+TOPS/W vs bit precision, 7nm projection. All numbers from the calibrated
+analytical model (core/energy.py) — modeled, not TPU-measured."""
+import time
+
+from repro.core import energy as E
+
+
+def run():
+    rows = []
+    t0 = time.time()
+    edp48, c48 = E.neurram_edp(4, 8)
+    ratios = [v / edp48 for v in E.PRIOR_ART_EDP.values()]
+    rows.append(("fig1d_edp_advantage_min_x", None, round(min(ratios), 2)))
+    rows.append(("fig1d_edp_advantage_max_x", None, round(max(ratios), 2)))
+    for ib, ob in [(1, 4), (2, 4), (4, 8), (6, 8)]:
+        c = E.mvm_cost(256, 256, ib, ob)
+        rows.append((f"ext10a_energy_pj_per_op_in{ib}b_out{ob}b", None,
+                     round(c.energy_pj / c.ops, 5)))
+        rows.append((f"ext10e_tops_per_w_in{ib}b_out{ob}b", None,
+                     round(c.tops_per_w, 2)))
+        gops = c.ops / c.latency_ns
+        rows.append((f"ext10d_peak_gops_in{ib}b_out{ob}b", None,
+                     round(gops * 48, 1)))   # 48 cores in parallel
+    e7, _ = E.neurram_edp(4, 8, node="7nm")
+    rows.append(("methods_7nm_edp_improvement_x", None, round(edp48 / e7)))
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    return [(n, round(us, 1) if u is None else u, d) for n, u, d in rows]

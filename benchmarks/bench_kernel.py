@@ -1,0 +1,45 @@
+"""CIM MVM kernel timing (interpret mode on CPU; BlockSpec path identical to
+the TPU lowering) + oracle comparison — per-kernel harness."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CIMConfig
+from repro.core.conductance import weights_to_conductances
+from repro.kernels.cim_mvm.ops import cim_mvm
+from repro.kernels.cim_mvm.ref import cim_mvm_ref
+from repro.kernels.noisy_matmul.ops import noisy_matmul
+
+
+def _time(fn, n=5):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(n):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256)) * 0.1
+    c = weights_to_conductances(w, cfg.device)
+    x = jax.random.randint(jax.random.PRNGKey(1), (64, 256), -7, 8)
+    q = cim_mvm_ref(x, c.g_pos, c.g_neg, 1.0, cfg, bit_serial=False).q_analog
+    vd = float(jnp.max(jnp.abs(q))) / cfg.out_mag_levels
+
+    us_k = _time(lambda: cim_mvm(x, c.g_pos, c.g_neg, vd, cfg,
+                                 block=(64, 128, 128)))
+    us_r = _time(lambda: cim_mvm_ref(x, c.g_pos, c.g_neg, vd, cfg,
+                                     bit_serial=True).counts)
+    match = bool(jnp.all(
+        cim_mvm(x, c.g_pos, c.g_neg, vd, cfg, block=(64, 128, 128))
+        == cim_mvm_ref(x, c.g_pos, c.g_neg, vd, cfg).counts))
+    xf = jax.random.normal(jax.random.PRNGKey(2), (128, 256))
+    us_n = _time(lambda: noisy_matmul(xf, w, 0.1, block=(128, 128, 128)))
+    return [
+        ("kernel_cim_mvm_interpret", round(us_k, 1), int(match)),
+        ("kernel_cim_mvm_oracle_bitserial", round(us_r, 1), 1),
+        ("kernel_noisy_matmul_interpret", round(us_n, 1), 1),
+    ]

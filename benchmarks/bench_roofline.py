@@ -1,0 +1,25 @@
+"""Assignment roofline table: read experiments/dryrun JSONs and emit the
+per-cell terms (compute/memory/collective seconds, dominant, fraction)."""
+import glob
+import json
+import os
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        if "__smoke" in path:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        if r.get("status") != "ok":
+            rows.append((f"roofline_{tag}", None, "error"))
+            continue
+        rf = r["roofline"]
+        rows.append((f"roofline_{tag}_dominant", r.get("compile_s"),
+                     rf["dominant"].replace("_s", "")))
+        frac = rf.get("roofline_fraction")
+        rows.append((f"roofline_{tag}_fraction", None,
+                     round(frac, 4) if frac else None))
+    return rows or [("roofline_no_dryrun_results_yet", None, 0)]

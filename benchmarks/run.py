@@ -1,0 +1,25 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_energy, bench_writeverify, bench_kernel,
+                   bench_noise_training, bench_accuracy, bench_chip_in_loop,
+                   bench_roofline)
+    mods = [("energy", bench_energy), ("writeverify", bench_writeverify),
+            ("kernel", bench_kernel), ("noise_training", bench_noise_training),
+            ("accuracy", bench_accuracy), ("chip_in_loop", bench_chip_in_loop),
+            ("roofline", bench_roofline)]
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        try:
+            for row in mod.run():
+                print(",".join("" if v is None else str(v) for v in row))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc(file=sys.stderr)
+            print(f"bench_{name}_FAILED,,{type(e).__name__}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,41 @@
+"""Serve a (reduced) assigned-architecture LM with the NeuRRAM technique on:
+every linear layer routed through the CIM chip-sim path (quantized bit-serial
+MVM surrogate + conductance noise).
+
+  PYTHONPATH=src python examples/lm_cim_serving.py --arch gemma2-9b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+import repro.models.transformer as T
+from repro.data import lm_tokens
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma2-9b")
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+cfg = configs.get(args.arch, smoke=True).replace(dtype=jnp.float32)
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+prompts = lm_tokens(jax.random.PRNGKey(1), 2, 12, cfg.vocab)
+
+for mode in ("off", "chipsim"):
+    c = cfg.replace(cim_mode=mode)
+    cache = T.init_cache(c, 2, 12 + args.gen)
+    t0 = time.time()
+    logits, cache = T.prefill(params, prompts, cache, c)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(args.gen - 1):
+        logits, cache = T.decode_step(params, cache, tok, c)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    ids = jnp.concatenate(out, 1)
+    print(f"cim_mode={mode:8s} {time.time()-t0:5.1f}s  "
+          f"tokens: {ids[0, :10].tolist()}")
+print("(chipsim: every matmul quantized to 4-bit-in/8-bit-out with 10% "
+      "conductance noise — the paper's datapath as an LM serving feature)")

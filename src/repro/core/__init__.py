@@ -1,0 +1,14 @@
+"""repro.core — NeuRRAM behavioral model (the paper's contribution in JAX)."""
+from .types import (CIMConfig, DeviceConfig, NonIdealityConfig, CoreSpec,
+                    EnergyConfig)  # noqa: F401
+from .cim import CIMLayer, program, forward, effective_weight  # noqa: F401
+from .conductance import (Conductances, weights_to_conductances,
+                          program_conductances,
+                          conductances_to_weights)  # noqa: F401
+from .quant import pact_quantize, quantize_to_int, dequantize  # noqa: F401
+from .noise import weight_noise, relaxation_sigma, apply_relaxation  # noqa: F401
+from .writeverify import write_verify, iterative_program  # noqa: F401
+from .calibration import calibrate_layer, calibrate_v_decr  # noqa: F401
+from .mapping import (MatrixReq, Tile, Plan, plan_layers, multicore_mvm,
+                      interleave_assignment)  # noqa: F401
+from .energy import mvm_cost, neurram_edp, PRIOR_ART_EDP, MVMCost  # noqa: F401

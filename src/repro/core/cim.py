@@ -1,0 +1,106 @@
+"""High-level CIM layer API — what models program onto the (simulated) chip.
+
+Three execution modes mirror the paper's experimental conditions:
+
+  * 'ideal'       — conductances encode weights exactly (no programming noise);
+                    still quantized input + voltage-mode ADC. Software-ish.
+  * 'relaxed'     — + conductance relaxation noise (Gaussian, state-dependent
+                    sigma, 3 programming iterations). The standard chip-sim.
+  * 'writeverify' — conductances produced by the full pulse-level write-verify
+                    + iterative-relaxation simulator. Most faithful; slow.
+
+`forward` runs the fused Pallas kernel (interpret mode on CPU) and returns the
+de-normalized digital output in x @ W units, with measured ADC offsets
+cancelled — exactly the chip's digital post-processing.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .types import CIMConfig
+from .quant import quantize_to_int
+from .conductance import weights_to_conductances, program_conductances
+from .calibration import calibrate_layer, LayerCalibration
+from .writeverify import iterative_program
+from ..kernels.cim_mvm.ops import cim_mvm
+from ..kernels.cim_mvm.ref import cim_mvm_ref, dequantize_output
+
+
+class CIMLayer(NamedTuple):
+    """Pytree: one weight matrix programmed onto (simulated) RRAM cores."""
+    g_pos: jax.Array
+    g_neg: jax.Array
+    w_max: jax.Array
+    norm: jax.Array
+    v_decr: jax.Array
+    adc_offset: jax.Array
+    in_alpha: jax.Array     # PACT input clip
+
+
+def program(key, w, cfg: CIMConfig, in_alpha=1.0,
+            x_cal: Optional[jax.Array] = None, mode: str = "relaxed"
+            ) -> CIMLayer:
+    """Program weight matrix w (R, C) onto the chip and calibrate it.
+
+    x_cal: optional (B_cal, R) float training-set activations for model-driven
+    calibration; defaults to a synthetic batch matched to in_alpha (the paper
+    shows training-set data is the right choice — tests quantify the gap).
+    """
+    k_prog, k_cal, k_syn = jax.random.split(key, 3)
+    if mode == "ideal":
+        c = weights_to_conductances(w, cfg.device)
+    elif mode == "relaxed":
+        c = program_conductances(k_prog, w, cfg.device, iterations=3)
+    elif mode == "writeverify":
+        ideal = weights_to_conductances(w, cfg.device)
+        g_pos = iterative_program(k_prog, ideal.g_pos, cfg.device)
+        g_neg = iterative_program(jax.random.fold_in(k_prog, 1), ideal.g_neg,
+                                  cfg.device)
+        norm = jnp.sum(g_pos + g_neg, axis=0)
+        c = type(ideal)(g_pos, g_neg, ideal.w_max, norm)
+    else:
+        raise ValueError(mode)
+
+    if x_cal is None:
+        x_cal = in_alpha * jax.random.truncated_normal(
+            k_syn, -2.0, 2.0, (64, w.shape[0]))
+    x_int_cal, _ = quantize_to_int(x_cal, in_alpha, cfg.in_bits, signed=True)
+    cal = calibrate_layer(k_cal, x_int_cal, c.g_pos, c.g_neg, cfg)
+    return CIMLayer(c.g_pos, c.g_neg, c.w_max, c.norm, cal.v_decr,
+                    cal.adc_offset, jnp.asarray(in_alpha, jnp.float32))
+
+
+def forward(layer: CIMLayer, x, cfg: CIMConfig, *, key=None,
+            use_kernel: bool = True, seed: int = 0):
+    """y ~= x @ W through the chip datapath. x: (B, R) float."""
+    x_int, scale = quantize_to_int(x, layer.in_alpha, cfg.in_bits, signed=True)
+    if use_kernel and not _needs_ref(cfg):
+        counts = cim_mvm(x_int, layer.g_pos, layer.g_neg, layer.v_decr, cfg,
+                         seed=seed, norm=layer.norm)
+    else:
+        out = cim_mvm_ref(x_int, layer.g_pos, layer.g_neg, layer.v_decr, cfg,
+                          key=key, adc_offset=layer.adc_offset,
+                          bit_serial=_needs_ref(cfg))
+        counts = out.counts
+    # digital offset cancellation (offsets were measured during calibration)
+    off_counts = jnp.round(layer.adc_offset / layer.v_decr)
+    if cfg.activation == "none":
+        counts = counts - off_counts[None, :]
+    return dequantize_output(counts, layer.v_decr, layer.norm, layer.w_max,
+                             scale, cfg)
+
+
+def _needs_ref(cfg: CIMConfig) -> bool:
+    """Per-phase non-idealities require the bit-serial oracle path."""
+    ni = cfg.nonideal
+    return (ni.ir_drop_alpha > 0 or ni.wire_r_alpha > 0
+            or ni.coupling_sigma > 0 or ni.adc_offset_sigma > 0
+            or cfg.activation == "stochastic")
+
+
+def effective_weight(layer: CIMLayer, cfg: CIMConfig):
+    """The weight the (noisy) array actually realizes."""
+    return (layer.g_pos - layer.g_neg) * layer.w_max / cfg.device.g_max

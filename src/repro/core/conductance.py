@@ -1,0 +1,59 @@
+"""Weight <-> differential RRAM conductance mapping (paper Methods).
+
+Each weight W is encoded by two cells on adjacent rows of the same column:
+    g_pos = max(g_max * W / w_max, g_min)
+    g_neg = max(-g_max * W / w_max, g_min)
+so the differential conductance g_pos - g_neg ~= g_max * W / w_max (exactly,
+when |W| >= w_max * g_min / g_max; small weights saturate at the g_min floor on
+both cells and cancel).
+
+The voltage-mode output is normalized by the *total* column conductance
+norm_j = sum_i (g_pos_ij + g_neg_ij); the chip pre-computes norm_j from the
+programmed weights and multiplies it back digitally. We do the same.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import DeviceConfig
+from .noise import apply_relaxation
+
+
+class Conductances(NamedTuple):
+    g_pos: jax.Array   # (R, C) uS
+    g_neg: jax.Array   # (R, C) uS
+    w_max: jax.Array   # scalar — per-matrix weight scale
+    norm: jax.Array    # (C,) uS — per-column total conductance (de-normalizer)
+
+
+def weights_to_conductances(w, dev: DeviceConfig) -> Conductances:
+    """Ideal (noise-free) differential encoding of a weight matrix (R, C)."""
+    w = jnp.asarray(w, jnp.float32)
+    w_max = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+    scaled = dev.g_max * w / w_max
+    g_pos = jnp.maximum(scaled, dev.g_min)
+    g_neg = jnp.maximum(-scaled, dev.g_min)
+    norm = jnp.sum(g_pos + g_neg, axis=0)
+    return Conductances(g_pos, g_neg, w_max, norm)
+
+
+def program_conductances(key, w, dev: DeviceConfig, iterations: int = 3
+                         ) -> Conductances:
+    """Encoding followed by programming noise (write-verify residual +
+    conductance relaxation). This is what physically sits in the array at
+    inference time. norm is recomputed from the *actual* (noisy) cells, since
+    the chip measures/knows the programmed conductances."""
+    ideal = weights_to_conductances(w, dev)
+    kp, kn = jax.random.split(key)
+    g_pos = apply_relaxation(kp, ideal.g_pos, dev, iterations)
+    g_neg = apply_relaxation(kn, ideal.g_neg, dev, iterations)
+    norm = jnp.sum(g_pos + g_neg, axis=0)
+    return Conductances(g_pos, g_neg, ideal.w_max, norm)
+
+
+def conductances_to_weights(c: Conductances, dev: DeviceConfig):
+    """Decode: the effective weight realized by the (possibly noisy) array."""
+    return (c.g_pos - c.g_neg) * c.w_max / dev.g_max

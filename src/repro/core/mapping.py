@@ -1,0 +1,180 @@
+"""TNSA multi-core weight-mapping (paper Fig. 2a + Methods 'Weight mapping
+strategy onto multiple CIM cores').
+
+A NeuRRAM chip has 48 cores of 256x256 cells; a weight matrix is first turned
+into a conductance matrix (differential rows double the height: 2R x C, plus
+bias rows), then:
+
+  * matrices larger than a core are SPLIT into <=256x256 tiles;
+  * computationally intensive matrices are DUPLICATED across spare cores
+    (data parallelism);
+  * small matrices are MERGED diagonally (parallel access);
+  * large matrices sharing rows are merged horizontally (sequential access);
+  * wide matrices may be split vertically across cores to limit IR drop.
+
+The planner below reproduces these decisions and the executor runs the actual
+multi-tile CIM MVM with digital partial-sum accumulation. At datacenter scale
+the same planner operates per TP shard (a 'core' is the intra-shard unit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import CoreSpec
+
+
+@dataclasses.dataclass
+class Tile:
+    layer: str
+    row0: int          # offset in the layer's conductance-row space (weight rows)
+    col0: int
+    rows: int
+    cols: int
+    core: int = -1     # assigned physical core
+    replica: int = 0   # >0 for duplicated tiles
+    seq_slot: int = 0  # >0 => shares a core with other tiles, accessed serially
+
+
+@dataclasses.dataclass
+class MatrixReq:
+    name: str
+    rows: int               # weight rows (pre-differential)
+    cols: int
+    intensity: float = 1.0  # compute per weight (MACs/weight) — duplication prio
+
+
+@dataclasses.dataclass
+class Plan:
+    tiles: List[Tile]
+    n_cores_used: int
+    duplicated: Dict[str, int]
+    merged: List[Tuple[str, ...]]
+
+    def tiles_for(self, name: str) -> List[Tile]:
+        return [t for t in self.tiles if t.layer == name and t.replica == 0]
+
+
+def plan_layers(reqs: Sequence[MatrixReq], spec: CoreSpec = CoreSpec(),
+                differential_rows: bool = True) -> Plan:
+    """Greedy reproduction of the paper's allocation policy."""
+    row_cap = spec.rows // 2 if differential_rows else spec.rows  # 128 weights
+    col_cap = spec.cols
+
+    # 1) split every matrix into tiles
+    per_layer: List[List[Tile]] = []
+    for r in reqs:
+        tiles = []
+        for i in range(math.ceil(r.rows / row_cap)):
+            for j in range(math.ceil(r.cols / col_cap)):
+                tiles.append(Tile(
+                    layer=r.name, row0=i * row_cap, col0=j * col_cap,
+                    rows=min(row_cap, r.rows - i * row_cap),
+                    cols=min(col_cap, r.cols - j * col_cap)))
+        per_layer.append(tiles)
+
+    all_tiles = [t for ts in per_layer for t in ts]
+    n = len(all_tiles)
+    merged: List[Tuple[str, ...]] = []
+
+    if n > spec.n_cores:
+        # 3)/4) merge: group low-intensity, narrow tiles. Greedy first-fit by
+        # (a) diagonal merge if rows+rows<=cap and cols+cols<=cap (parallel),
+        # (b) horizontal merge (sequential) otherwise.
+        inten = {r.name: r.intensity for r in reqs}
+        order = sorted(range(n), key=lambda i: (inten[all_tiles[i].layer],
+                                                all_tiles[i].rows *
+                                                all_tiles[i].cols))
+        groups: List[List[int]] = []
+        placed = [False] * n
+        # keep high-intensity tiles un-merged (paper: avoid merging hot layers)
+        budget_excess = n - spec.n_cores
+        for idx in order:
+            if placed[idx]:
+                continue
+            group = [idx]
+            placed[idx] = True
+            if budget_excess > 0:
+                for jdx in order:
+                    if placed[jdx] or budget_excess <= 0:
+                        continue
+                    rs = sum(all_tiles[g].rows for g in group) + all_tiles[jdx].rows
+                    cs = sum(all_tiles[g].cols for g in group) + all_tiles[jdx].cols
+                    diag_ok = rs <= row_cap and cs <= col_cap
+                    horiz_ok = (all_tiles[jdx].rows == all_tiles[group[0]].rows
+                                and len(group) < 4)
+                    if diag_ok or horiz_ok:
+                        group.append(jdx)
+                        placed[jdx] = True
+                        budget_excess -= 1
+            groups.append(group)
+        if len(groups) > spec.n_cores:
+            raise ValueError(
+                f"model needs {len(groups)} cores > {spec.n_cores} available")
+        for gi, group in enumerate(groups):
+            if len(group) > 1:
+                merged.append(tuple(all_tiles[g].layer for g in group))
+            for slot, g in enumerate(group):
+                all_tiles[g].core = gi
+                all_tiles[g].seq_slot = slot
+        n_used = len(groups)
+        dup: Dict[str, int] = {}
+    else:
+        for ci, t in enumerate(all_tiles):
+            t.core = ci
+        n_used = n
+        # 2) duplicate hottest layers into spare cores (data parallelism)
+        dup = {}
+        spare = spec.n_cores - n_used
+        by_heat = sorted(reqs, key=lambda r: -r.intensity)
+        extra: List[Tile] = []
+        for r in by_heat:
+            if spare <= 0 or r.intensity <= 1.0:
+                break
+            base = [t for t in all_tiles if t.layer == r.name]
+            copies = min(spare // max(len(base), 1),
+                         max(int(r.intensity) - 1, 0))
+            for c in range(copies):
+                for t in base:
+                    extra.append(dataclasses.replace(
+                        t, core=spec.n_cores - spare, replica=c + 1))
+                    spare -= 1
+            if copies:
+                dup[r.name] = copies
+        all_tiles += extra
+        n_used = spec.n_cores - spare
+
+    return Plan(tiles=all_tiles, n_cores_used=n_used, duplicated=dup,
+                merged=merged)
+
+
+def multicore_mvm(x, weight, plan_tiles: Sequence[Tile], matmul_fn):
+    """Execute y = x @ weight tile-by-tile with digital partial sums.
+
+    matmul_fn(x_tile, w_tile, tile) -> (B, tile.cols) performs one core's CIM
+    MVM (any mode: exact / noisy / chip-sim). Row-split partial sums are
+    accumulated digitally (the chip gives partial sums 2 extra output bits;
+    we accumulate in f32 which dominates that).
+    """
+    b = x.shape[0]
+    cols = weight.shape[1]
+    y = jnp.zeros((b, cols), jnp.float32)
+    for t in plan_tiles:
+        xt = jax.lax.dynamic_slice(x, (0, t.row0), (b, t.rows))
+        wt = jax.lax.dynamic_slice(weight, (t.row0, t.col0), (t.rows, t.cols))
+        yt = matmul_fn(xt, wt, t)
+        y = jax.lax.dynamic_update_slice(
+            y, jax.lax.dynamic_slice(y, (0, t.col0), (b, t.cols)) + yt,
+            (0, t.col0))
+    return y
+
+
+def interleave_assignment(n_units: int, n_cores: int):
+    """Paper Fig. 4f: assign adjacent pixels (visible units) to different cores
+    so each core sees a down-sampled version of the whole image, equalizing
+    per-core output dynamic range. Returns core index per unit."""
+    return jnp.arange(n_units) % n_cores

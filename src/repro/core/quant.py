@@ -1,0 +1,72 @@
+"""Activation quantization (PACT) and integer formats used by the CIM datapath.
+
+The paper quantizes inputs of every conv/fc layer to 3-4 bits with PACT
+(Parameterized Clipping Activation, Choi et al. 2018): y = clip(x, 0, alpha),
+quantized uniformly; alpha is a learned parameter. We implement PACT with a
+straight-through estimator so it is differentiable for noise-resilient training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_ste(x):
+    """Round with straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def pact_quantize(x, alpha, bits: int, signed: bool = False):
+    """PACT quantization. Returns float values on the quantized grid.
+
+    unsigned: levels {0..2^bits-1} scaled to [0, alpha]
+    signed:   levels {-(2^(b-1)-1)..2^(b-1)-1} scaled to [-alpha, alpha]
+    """
+    alpha = jnp.asarray(alpha, x.dtype)
+    if signed:
+        n = (1 << (bits - 1)) - 1
+        xc = jnp.clip(x, -alpha, alpha)
+        return _round_ste(xc * n / alpha) * alpha / n
+    n = (1 << bits) - 1
+    xc = jnp.clip(x, 0.0, alpha)
+    return _round_ste(xc * n / alpha) * alpha / n
+
+
+def quantize_to_int(x, alpha, bits: int, signed: bool = True):
+    """Map float x to the integer grid the chip drives on its input wires.
+
+    Returns (x_int int32 in [-in_max, in_max] (or [0, 2^bits-1] unsigned),
+    scale) such that x ~= x_int * scale.
+    """
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if signed:
+        n = (1 << (bits - 1)) - 1
+        scale = alpha / n
+        xi = jnp.clip(jnp.round(x / scale), -n, n).astype(jnp.int32)
+    else:
+        n = (1 << bits) - 1
+        scale = alpha / n
+        xi = jnp.clip(jnp.round(x / scale), 0, n).astype(jnp.int32)
+    return xi, scale
+
+
+def dequantize(x_int, scale):
+    return x_int.astype(jnp.float32) * scale
+
+
+def int_bit_planes(x_int, mag_bits: int):
+    """Decompose signed ints into ternary bit-plane pulses (paper Methods).
+
+    An n-bit signed input is sent as (n-1) pulses; pulse k (k = mag_bits-1 .. 0,
+    MSB first) is sign(x) * bit_k(|x|), in {-1, 0, +1}, and is integrated for
+    2^k sampling cycles.
+
+    Returns int32 array of shape (mag_bits,) + x_int.shape, MSB first.
+    """
+    sign = jnp.sign(x_int)
+    mag = jnp.abs(x_int)
+    planes = []
+    for k in range(mag_bits - 1, -1, -1):
+        bit = (mag >> k) & 1
+        planes.append((sign * bit).astype(jnp.int32))
+    return jnp.stack(planes, axis=0)

@@ -1,0 +1,110 @@
+"""Incremental-pulse write-verify RRAM programming simulator.
+
+Paper Methods ('RRAM write-verify programming and conductance relaxation') and
+Extended Data Fig. 3: starting from the device's initial state, alternate
+read / incremental SET (or RESET) pulses — SET from 1.2V, RESET from 1.5V,
++0.1V per consecutive pulse, reversing polarity on overshoot — until the cell
+is within +-1 uS of target or 30 polarity reversals time out. The paper
+measures 99% convergence and 8.52 pulses/cell on average.
+
+The device update model is a stochastic multiplicative-step model: a pulse at
+voltage V moves conductance by k*(V - Vth) with ~50% lognormal cycle-to-cycle
+variation, the classic behavior of HfOx filamentary cells. Fully vectorized
+over the array with lax.while_loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import DeviceConfig
+from .noise import apply_relaxation
+
+
+class ProgramResult(NamedTuple):
+    g: jax.Array           # final conductances (uS)
+    n_pulses: jax.Array    # pulses used per cell
+    converged: jax.Array   # bool per cell
+
+
+# device response constants (uS per volt overdrive)
+_K_SET = 6.0
+_K_RESET = 7.0
+_VTH_SET = 0.9
+_VTH_RESET = 1.1
+_CYCLE_VAR = 0.5         # lognormal sigma of pulse response
+_MAX_STEPS = 400
+
+
+def write_verify(key, g_target, dev: DeviceConfig) -> ProgramResult:
+    """Program an array of cells to g_target (uS), elementwise."""
+    g_target = jnp.asarray(g_target, jnp.float32)
+    shape = g_target.shape
+    k0, k1 = jax.random.split(key)
+    g0 = jax.random.uniform(k0, shape, minval=dev.g_min, maxval=8.0)
+
+    def cond(state):
+        step, _, _, _, _, _, done, _ = state
+        return jnp.logical_and(step < _MAX_STEPS, ~jnp.all(done))
+
+    def body(state):
+        step, key, g, v_set, v_reset, reversals, done, n_pulses = state
+        key, kr = jax.random.split(key)
+        err = g_target - g
+        need_set = err > dev.accept_range
+        need_reset = err < -dev.accept_range
+        in_range = ~(need_set | need_reset)
+        done = done | in_range | (reversals > dev.max_reversals)
+        active = ~done
+
+        # polarity per cell this step
+        eta = jnp.exp(_CYCLE_VAR * jax.random.normal(kr, shape))
+        dg_set = _K_SET * jnp.maximum(v_set - _VTH_SET, 0.0) * eta
+        dg_reset = _K_RESET * jnp.maximum(v_reset - _VTH_RESET, 0.0) * eta
+        delta = jnp.where(need_set, dg_set, jnp.where(need_reset, -dg_reset, 0.0))
+        g_new = jnp.clip(g + delta * active, dev.g_min, dev.g_max * 1.2)
+
+        # detect overshoot (sign of error flips) -> polarity reversal:
+        # reset pulse amplitude to v0 and bump reversal counter
+        err_new = g_target - g_new
+        flipped = (jnp.sign(err_new) != jnp.sign(err)) & active & ~in_range
+        v_set = jnp.where(flipped, dev.set_v0,
+                          jnp.where(need_set & active, v_set + dev.v_increment,
+                                    v_set))
+        v_reset = jnp.where(flipped, dev.reset_v0,
+                            jnp.where(need_reset & active,
+                                      v_reset + dev.v_increment, v_reset))
+        reversals = reversals + flipped.astype(jnp.int32)
+        n_pulses = n_pulses + active.astype(jnp.int32)
+        return (step + 1, key, g_new, v_set, v_reset, reversals, done, n_pulses)
+
+    init = (jnp.int32(0), k1, g0,
+            jnp.full(shape, dev.set_v0), jnp.full(shape, dev.reset_v0),
+            jnp.zeros(shape, jnp.int32), jnp.zeros(shape, bool),
+            jnp.zeros(shape, jnp.int32))
+    _, _, g, _, _, _, _, n_pulses = jax.lax.while_loop(cond, body, init)
+    converged = jnp.abs(g_target - g) <= dev.accept_range
+    return ProgramResult(g, n_pulses, converged)
+
+
+def iterative_program(key, g_target, dev: DeviceConfig, iterations: int = 3):
+    """Full programming flow: write-verify, then `iterations` rounds of
+    relaxation + re-programming of drifted cells (paper: 3 iterations narrow
+    relaxation sigma by ~29%). Returns the conductances as they stand >=30 min
+    after the last pulse (i.e., with final relaxation applied)."""
+    g = write_verify(key, g_target, dev).g
+
+    for it in range(iterations):
+        key, kr, kp = jax.random.split(key, 3)
+        # later iterations see less residual drift (the population that
+        # re-drifts shrinks); model via the iteration-aware sigma
+        g_relaxed = apply_relaxation(kr, g, dev, iterations=it + 1)
+        drifted = jnp.abs(g_relaxed - g_target) > dev.accept_range
+        if it < iterations - 1:
+            g_reprog = write_verify(kp, g_target, dev).g
+            g = jnp.where(drifted, g_reprog, g_relaxed)
+        else:
+            g = g_relaxed
+    return g

@@ -1,0 +1,2 @@
+from .synthetic import (cluster_images, keyword_mfcc, binary_patterns,
+                        corrupt_flip, corrupt_occlude, lm_tokens)  # noqa: F401

@@ -1,0 +1,89 @@
+"""Deterministic synthetic datasets (offline container — see DESIGN.md #6.4).
+
+Shapes mirror the paper's benchmarks (MNIST 28x28, CIFAR 32x32x3, GSC
+50x40 MFCC) but contents are seeded synthetic with learnable structure, so
+every accuracy claim in tests/benchmarks is *relative* (technique on vs off),
+mirroring the paper's ablation structure.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cluster_images(key, n: int, hw: int = 16, channels: int = 1,
+                   classes: int = 10, noise: float = 0.25, proto_seed: int = 7,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Images = smoothed class prototype + pixel noise, in [0, 1].
+
+    proto_seed fixes the class structure so different sample keys (train/test
+    splits) share the same task."""
+    kl, kn = jax.random.split(key, 2)
+    kp = jax.random.PRNGKey(proto_seed)
+    protos = jax.random.uniform(kp, (classes, hw, hw, channels))
+    # smooth prototypes so conv nets have spatial structure to exploit
+    k = jnp.ones((3, 3)) / 9.0
+    protos = jax.vmap(
+        lambda img: jax.vmap(
+            lambda c: jax.scipy.signal.convolve2d(c, k, mode="same"),
+            in_axes=2, out_axes=2)(img))(protos)
+    labels = jax.random.randint(kl, (n,), 0, classes)
+    x = protos[labels] + noise * jax.random.normal(kn, (n, hw, hw, channels))
+    return jnp.clip(x, 0.0, 1.0), labels
+
+
+def keyword_mfcc(key, n: int, t: int = 50, f: int = 40, classes: int = 12,
+                 noise: float = 0.4, proto_seed: int = 11,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Synthetic MFCC series: class-specific frequency trajectories + noise."""
+    kl, kn, kph = jax.random.split(key, 3)
+    kp = jax.random.PRNGKey(proto_seed)
+    freq = jax.random.uniform(kp, (classes, f), minval=0.3, maxval=3.0)
+    amp = jax.random.uniform(jax.random.fold_in(kp, 1), (classes, f),
+                             minval=0.5, maxval=2.0)
+    labels = jax.random.randint(kl, (n,), 0, classes)
+    phase = jax.random.uniform(kph, (n, 1, f), maxval=2 * jnp.pi)
+    ts = jnp.arange(t)[None, :, None] / t * 2 * jnp.pi
+    x = amp[labels][:, None, :] * jnp.sin(freq[labels][:, None, :] * ts + phase)
+    return x + noise * jax.random.normal(kn, (n, t, f)), labels
+
+
+def binary_patterns(key, n: int, d: int = 784, rank: int = 12,
+                    labels_dim: int = 10, proto_seed: int = 13) -> jax.Array:
+    """Structured binary patterns for the RBM: low-rank Bernoulli logits,
+    with a one-hot 'label' block appended (paper: 784 pixels + 10 labels)."""
+    ku, ks, kl = jax.random.split(key, 3)
+    kv = jax.random.PRNGKey(proto_seed)
+    u = jax.random.normal(ku, (n, rank))
+    v = jax.random.normal(kv, (rank, d)) * 2.0
+    probs = jax.nn.sigmoid(u @ v)
+    pix = jax.random.bernoulli(ks, probs).astype(jnp.float32)
+    lab = jax.nn.one_hot(jax.random.randint(kl, (n,), 0, labels_dim),
+                         labels_dim)
+    return jnp.concatenate([pix, lab], axis=-1)
+
+
+def corrupt_flip(key, v, frac: float = 0.2, pixels: int = 784):
+    """Flip a random `frac` of the pixel block to complementary intensity."""
+    flip = jax.random.bernoulli(key, frac, v.shape) & \
+        (jnp.arange(v.shape[-1]) < pixels)
+    v_c = jnp.where(flip, 1.0 - v, v)
+    mask_known = ~flip
+    return v_c, mask_known
+
+
+def corrupt_occlude(key, v, frac: float = 1 / 3, pixels: int = 784):
+    """Zero the bottom `frac` of the pixel block (occlusion)."""
+    del key
+    cut = int(pixels * (1 - frac))
+    idx = jnp.arange(v.shape[-1])
+    occluded = (idx >= cut) & (idx < pixels)
+    v_c = jnp.where(occluded, 0.0, v)
+    return v_c, ~occluded
+
+
+def lm_tokens(key, batch: int, seq: int, vocab: int):
+    """Uniform random token ids for LM smoke tests and dry-run feeds."""
+    return jax.random.randint(key, (batch, seq), 0, vocab, dtype=jnp.int32)

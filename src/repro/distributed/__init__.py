@@ -1,0 +1,2 @@
+from .sharding import (param_pspecs, batch_pspecs, cache_pspecs,
+                       named_shardings)  # noqa: F401

@@ -1,0 +1,184 @@
+"""Named-axis sharding rules (DP / TP / EP / SP) for every architecture.
+
+Megatron-style tensor parallelism expressed as logical rules over parameter
+path names, applied with tree_map_with_path:
+
+  * column-parallel in-projections (wq/wk/wv, w_g/w_i, in_proj, rwkv mixes):
+    output dim on 'model'
+  * row-parallel out-projections (wo, w_o, out_proj, cv): input dim on 'model'
+  * embeddings / unembeddings: vocab on 'model'
+  * MoE expert stacks (ew_*): expert dim on 'model' (expert parallelism —
+    the datacenter analogue of NeuRRAM's power-gated core selection)
+  * norms / small vectors: replicated
+  * batch dims of activations: ('pod', 'data'); decode KV caches shard the
+    head_dim on 'model' (kv-head counts are often < mesh axis; head_dim is
+    always divisible — the resulting decode all-reduce is a tracked roofline
+    term and a hillclimb target, see EXPERIMENTS.md)
+
+Stacked layer params (leading L dim from scan) get a leading None.
+GSPMD handles non-divisible dims by padding (e.g. seamless vocab 256206).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (suffix match on the last path key) -> spec for the UNSTACKED param
+_RULES = [
+    # dense attention + MLP
+    ("wq", P(None, "model")), ("wk", P(None, "model")),
+    ("wv", P(None, "model")), ("wo", P("model", None)),
+    ("bq", P("model")), ("bk", P("model")), ("bv", P("model")),
+    ("xwq", P(None, "model")), ("xwk", P(None, "model")),
+    ("xwv", P(None, "model")), ("xwo", P("model", None)),
+    ("w_g", P(None, "model")), ("w_i", P(None, "model")),
+    ("w_o", P("model", None)),
+    # MoE
+    ("router", P(None, None)),
+    ("ew_g", P("model", None, None)), ("ew_i", P("model", None, None)),
+    ("ew_o", P("model", None, None)),
+    ("sw_g", P(None, "model")), ("sw_i", P(None, "model")),
+    ("sw_o", P("model", None)),
+    # rwkv6
+    ("wr", P(None, "model")), ("wg", P(None, "model")),
+    ("ck", P(None, "model")), ("cv", P("model", None)),
+    ("cr", P(None, "model")),
+    ("u", P("model", None)),
+    # mamba2
+    ("in_proj", P(None, "model")), ("out_proj", P("model", None)),
+    ("a_log", P("model")), ("dt_bias", P("model")), ("dd", P("model")),
+    # embeddings
+    ("embed", P("model", None)), ("unembed", P(None, "model")),
+    ("vis_proj", P(None, None)),
+]
+
+_STACKED_KEYS = ("layers", "dense_layers", "enc_layers")
+
+
+def _spec_for(path, leaf) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    last = keys[-1]
+    stacked = any(k in _STACKED_KEYS for k in keys[:-1])
+    spec = P()
+    for suffix, s in _RULES:
+        if last == suffix:
+            spec = s
+            break
+    if stacked:
+        spec = P(*((None,) + tuple(spec)))
+    # pad/truncate to leaf rank
+    parts = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+    return P(*parts[:leaf.ndim])
+
+
+def param_pspecs(params_tree) -> Any:
+    """PartitionSpec pytree matching a (shape) pytree of params."""
+    return jax.tree_util.tree_map_with_path(_spec_for, params_tree)
+
+
+def batch_pspecs(batch_tree, data_axes=("pod", "data")) -> Any:
+    """Shard every batch leaf's leading dim over the data axes."""
+    def spec(path, leaf):
+        parts = (data_axes,) + (None,) * (leaf.ndim - 1)
+        return P(*parts)
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, data_axes=("pod", "data"),
+                 kv_mode: str = "hd") -> Any:
+    """Decode-state sharding: batch over data axes; KV tensors shard either
+    the head_dim ('hd', baseline) or the SEQUENCE dim ('seq',
+    flash-decoding-style: per-shard partial softmax, tiny per-head
+    all-reduces instead of full-activation ones — see §Perf)."""
+    def spec(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        last = keys[-1]
+        if leaf.ndim >= 4:
+            # (L, B, S, nkv, hd) KV / (L, B, H, n, p) ssm states
+            parts = [None] * leaf.ndim
+            parts[1] = data_axes
+            if kv_mode == "seq" and leaf.ndim == 5 and last in ("k", "v",
+                                                                "ak", "av"):
+                parts[2] = "model"
+            else:
+                parts[-1] = "model"
+            return P(*parts)
+        if leaf.ndim >= 2 and last in ("x_tm", "x_cm"):
+            return P(None, data_axes, None)
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def opt_pspecs(params_specs) -> Dict:
+    """AdamW state shards like its params; step counter replicated."""
+    return {"m": params_specs, "v": params_specs, "t": P()}
+
+
+def zero_pspecs(shape_tree, spec_tree, mesh: Mesh,
+                data_axes=("pod", "data"), min_size: int = 1 << 20):
+    """ZeRO-style extra sharding: add the data axes to the first unsharded,
+    divisible dim of every large leaf. Applied to optimizer state always
+    (ZeRO-1) and to params for memory-bound archs (FSDP) — the classic
+    memory-vs-collective trade recorded in EXPERIMENTS.md §Perf."""
+    axes = tuple(a for a in data_axes if a in mesh.axis_names)
+    if not axes:
+        return spec_tree
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def fix(leaf, spec):
+        parts = list(tuple(spec))
+        parts += [None] * (leaf.ndim - len(parts))
+        if leaf.size < min_size:
+            return P(*parts)
+        used = set()
+        for ax in parts:
+            for a_ in (ax if isinstance(ax, tuple) else (ax,)):
+                used.add(a_)
+        if any(a_ in used for a_ in axes):
+            return P(*parts)          # already data-sharded (idempotent)
+        # Prefer non-leading dims: dim0 of stacked layer params is the scan
+        # axis — sharding it makes GSPMD gather the WHOLE stack at once
+        # (involuntary full rematerialization); sharding an inner dim yields
+        # clean per-layer all-gathers instead.
+        order = list(range(1, leaf.ndim)) + [0] if leaf.ndim >= 2 else [0]
+        for i in order:
+            if parts[i] is None and leaf.shape[i] % n == 0:
+                parts[i] = axes if len(axes) > 1 else axes[0]
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map(fix, shape_tree, spec_tree)
+
+
+def named_shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def fit_pspecs(shape_tree, spec_tree, mesh: Mesh):
+    """Downgrade any spec axis whose tensor dim is not divisible by the mesh
+    axis product to replicated (pjit argument shardings require
+    divisibility). E.g. smoke configs with 2 heads on a 16-way model axis, or
+    decode batch=1 on the data axes."""
+    def fix(leaf, spec):
+        parts = list(tuple(spec))
+        parts += [None] * (leaf.ndim - len(parts))
+        out = []
+        for dim, ax in zip(leaf.shape, parts):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            out.append(ax if dim % n == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map(fix, shape_tree, spec_tree)

@@ -1,0 +1,2 @@
+from .ref import cim_mvm_ref, adc_convert, pwl_tanh_counts  # noqa: F401
+from .ops import cim_mvm  # noqa: F401

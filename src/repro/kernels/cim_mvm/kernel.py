@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused NeuRRAM CIM MVM (matmul + voltage-mode
+normalization + ADC quantization + activation epilogue).
+
+TPU adaptation (DESIGN.md section 2): the chip's motivation is avoiding data
+movement; on TPU the analogous win is keeping the whole neuron datapath —
+conductance-normalization, ADC charge-decrement quantization and the fused
+activation — in VMEM/VREGs as an epilogue of the MXU matmul, so the analog
+charge `q` never round-trips to HBM.
+
+The bit-serial input loop of the chip is algebraically folded here
+(sum_k 2^k p_k = x_int, exact for the linear datapath); per-phase non-ideality
+studies use the jnp oracle in ref.py. Grid iterates K innermost with a VMEM
+f32 accumulator; the epilogue fires on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..prng import hash_uniform
+
+
+def _pwl_tanh(steps, n_max: float):
+    """PWL tanh counter schedule — same math as ref.pwl_tanh_counts."""
+    s = n_max / 47.0
+    k0, k1, k2 = 35.0 * s, 40.0 * s, 43.0 * s
+    st0 = k0
+    st1 = k0 + 2.0 * (k1 - k0)
+    st2 = st1 + 3.0 * (k2 - k1)
+    out = jnp.where(
+        steps <= st0, steps,
+        jnp.where(steps <= st1, k0 + (steps - st0) * 0.5,
+                  jnp.where(steps <= st2, k1 + (steps - st1) / 3.0,
+                            k2 + (steps - st2) * 0.25)))
+    return jnp.minimum(jnp.floor(out), n_max)
+
+
+def _epilogue(q, vd, activation: str, n_max: int, seed_ref=None, ij=(0, 0)):
+    sign = jnp.sign(q)
+    # charge-decrement count: round-to-nearest (comparator flips mid-step)
+    steps = jnp.floor(jnp.abs(q) / vd + 0.5)
+    if activation == "relu":
+        return jnp.minimum(steps, n_max) * (sign > 0)
+    if activation in ("tanh", "sigmoid"):
+        mag = _pwl_tanh(jnp.minimum(steps, 4.0 * n_max), float(n_max))
+        out = sign * mag
+        if activation == "sigmoid":
+            out = jnp.floor((out + n_max) * 0.5)
+        return out
+    if activation == "stochastic":
+        # LFSR-analogue: stateless hash PRNG, uniform in +-(vd * n_max).
+        u = hash_uniform(q.shape, seed_ref[0], ij[0], ij[1]) * 2.0 - 1.0
+        return (q + u * (vd * n_max) > 0).astype(jnp.float32)
+    return sign * jnp.minimum(steps, n_max)
+
+
+def _cim_kernel(x_ref, gd_ref, invn_ref, vd_ref, seed_ref, out_ref, acc_ref, *,
+                nk: int, v_read: float, activation: str, n_max: int):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], gd_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        q = acc_ref[...] * v_read * invn_ref[...]       # (BM,BN)*(1,BN)
+        counts = _epilogue(q, vd_ref[0], activation, n_max, seed_ref,
+                           ij=(i, j))
+        out_ref[...] = counts.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "n_max", "v_read", "bm", "bk", "bn",
+                     "interpret"))
+def cim_mvm_pallas(x, gd, inv_norm, v_decr, seed, *, activation: str = "none",
+                   n_max: int = 127, v_read: float = 0.5,
+                   bm: int = 256, bk: int = 256, bn: int = 256,
+                   interpret: bool = False):
+    """x:(M,K) f32 integer-valued; gd:(K,N) f32; inv_norm:(N,) f32;
+    v_decr: scalar f32; seed: scalar int32 (stochastic activation only).
+    Returns (M,N) f32 ADC counts."""
+    m, kdim = x.shape
+    _, n = gd.shape
+    bm, bk, bn = min(bm, m), min(bk, kdim), min(bn, n)
+
+    def pad(a, mults):
+        pads = [(0, -s % t) for s, t in zip(a.shape, mults)]
+        return jnp.pad(a, pads) if any(p[1] for p in pads) else a
+
+    xp = pad(x, (bm, bk))
+    gdp = pad(gd, (bk, bn))
+    invp = pad(inv_norm.reshape(1, -1), (1, bn))
+    mp, kp = xp.shape
+    np_ = gdp.shape[1]
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_cim_kernel, nk=nk, v_read=v_read,
+                          activation=activation, n_max=n_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, gdp, invp,
+      jnp.asarray(v_decr, jnp.float32).reshape(1),
+      jnp.asarray(seed, jnp.int32).reshape(1))
+    return out[:m, :n]

@@ -1,0 +1,40 @@
+"""Jit'd public wrapper around the CIM MVM Pallas kernel.
+
+`cim_mvm` is the fast path used by models in chip-sim mode. It consumes the
+*folded* representation (differential conductance gd = g_pos - g_neg and the
+per-column normalizer) and returns signed ADC counts. On this CPU container it
+runs the kernel in interpret mode; on TPU set interpret=False (default chosen
+from backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import cim_mvm_pallas
+from ...core.types import CIMConfig
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cim_mvm(x_int, g_pos, g_neg, v_decr, cfg: CIMConfig, *, seed=0,
+            norm=None, block=(256, 256, 256), interpret=None):
+    """CIM MVM returning signed ADC counts, shape (B, C) float32.
+
+    x_int: (B, R) integer-valued float or int array.
+    g_pos/g_neg: (R, C) conductances in uS.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    gd = (g_pos - g_neg).astype(jnp.float32)
+    if norm is None:
+        norm = jnp.sum(g_pos + g_neg, axis=0)
+    inv_norm = 1.0 / norm.astype(jnp.float32)
+    bm, bk, bn = block
+    return cim_mvm_pallas(
+        x_int.astype(jnp.float32), gd, inv_norm,
+        jnp.asarray(v_decr, jnp.float32), jnp.asarray(seed, jnp.int32),
+        activation=cfg.activation, n_max=cfg.out_mag_levels,
+        v_read=cfg.v_read, bm=bm, bk=bk, bn=bn, interpret=interpret)

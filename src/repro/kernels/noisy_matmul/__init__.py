@@ -1,0 +1,2 @@
+from .ops import noisy_matmul  # noqa: F401
+from .ref import noisy_matmul_ref  # noqa: F401

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: matmul with on-the-fly Gaussian weight noise.
+
+Noise-resilient training (paper Fig. 3c) perturbs every weight with fresh
+Gaussian noise each forward pass. Materializing eps in HBM doubles weight
+traffic; this kernel draws the noise inside the MXU pipeline (stateless hashed
+counter PRNG + Box-Muller, kernels/prng.py), so HBM traffic stays at the
+clean-weights level — the same avoid-data-movement argument as the chip.
+
+Noise is a function of (seed, tile indices) only, so the same (K,N) weight tile
+sees the same perturbation regardless of which M tile consumes it — matching
+the semantics of 'one noisy weight matrix per step'.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..prng import hash_normal
+
+
+def _kernel(x_ref, w_ref, sig_ref, seed_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Seed depends on (weight-tile coords) only -> consistent noisy W per step.
+    eps = hash_normal(w_ref.shape, seed_ref[0], k, pl.program_id(1))
+    wn = w_ref[...] + sig_ref[0] * eps
+    acc_ref[...] += jnp.dot(x_ref[...], wn, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "interpret"))
+def noisy_matmul_pallas(x, w, sigma_abs, seed, *, bm=256, bk=256, bn=256,
+                        interpret=False):
+    m, kdim = x.shape
+    _, n = w.shape
+    bm, bk, bn = min(bm, m), min(bk, kdim), min(bn, n)
+
+    def pad(a, mults):
+        pads = [(0, -s % t) for s, t in zip(a.shape, mults)]
+        return jnp.pad(a, pads) if any(p[1] for p in pads) else a
+
+    xp, wp = pad(x, (bm, bk)), pad(w, (bk, bn))
+    nk = xp.shape[1] // bk
+    grid = (xp.shape[0] // bm, wp.shape[1] // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp.astype(jnp.float32), wp.astype(jnp.float32),
+      jnp.asarray(sigma_abs, jnp.float32).reshape(1),
+      jnp.asarray(seed, jnp.int32).reshape(1))
+    return out[:m, :n]

@@ -1,0 +1,19 @@
+"""Oracle for the noise-injection training matmul.
+
+y = x @ (w + sigma * wmax * eps),  eps ~ N(0, 1)
+
+This is the forward pass of noise-resilient NN training (paper Fig. 3c). The
+kernel generates eps with the in-kernel TPU PRNG, so exact-value parity with
+jax.random is impossible; parity tests check the sigma=0 path exactly and the
+sigma>0 path statistically (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def noisy_matmul_ref(x, w, sigma_frac, key):
+    wmax = jnp.max(jnp.abs(w))
+    eps = jax.random.normal(key, w.shape, dtype=jnp.float32)
+    return x @ (w + sigma_frac * wmax * eps)

@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh with ShapeDtypeStruct inputs (no allocation), record
+memory_analysis / cost_analysis / HLO collective bytes for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--smoke]
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..models import transformer as T
+from ..distributed.sharding import (param_pspecs, batch_pspecs, cache_pspecs,
+                                    opt_pspecs, fit_pspecs, zero_pspecs)
+from .roofline import model_flops
+from .mesh import make_production_mesh, data_axes
+from .steps import make_train_step, make_decode_step, make_prefill_step, \
+    adamw_init_f32
+
+# TPU v5e-class hardware constants for the roofline terms
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+          "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op, by type."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_txt)
+        out["count"] += 1
+    return out
+
+
+def _reduced_cfg(cfg, n_layers):
+    kw = {"n_layers": n_layers, "scan_unroll": True}
+    if cfg.enc_layers > 0:
+        kw["enc_layers"] = n_layers
+    return cfg.replace(**kw)
+
+
+def _layer_pair(cfg):
+    """(a, b) reduced layer counts honoring the arch's periodic structure."""
+    if cfg.moe_every > 1:
+        return 2 * cfg.moe_every, 4 * cfg.moe_every
+    if cfg.hybrid_attn_every > 0:
+        return cfg.hybrid_attn_every, 2 * cfg.hybrid_attn_every
+    if cfg.alt_local_global:
+        return 2, 4
+    return 2, 4
+
+
+def _compile_cell(cfg, shape, mesh, daxes, *, donate=True, fsdp=False,
+                  accum=1, kv_mode="hd", grad_sync="micro"):
+    """Lower + compile one step function for cfg/shape on mesh."""
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    params_sh = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    pspec = fit_pspecs(params_sh, param_pspecs(params_sh), mesh)
+    if fsdp and shape.kind == "train":
+        pspec = zero_pspecs(params_sh, pspec, mesh, daxes)
+    batch_sh = configs.input_specs(cfg, shape, dtype=cfg.dtype)
+    bspec = fit_pspecs(batch_sh, batch_pspecs(batch_sh, daxes), mesh)
+    with mesh:
+        if shape.kind == "train":
+            opt_sh = jax.eval_shape(lambda: adamw_init_f32(params_sh))
+            zspec = zero_pspecs(params_sh, pspec, mesh, daxes)   # ZeRO-1
+            ospec = {"m": zspec, "v": zspec, "t": P()}
+            jitted = jax.jit(
+                make_train_step(cfg, accum=accum,
+                                grad_spec=ns(zspec) if accum > 1 else None,
+                                data_axes=daxes, mesh=mesh,
+                                grad_sync=grad_sync),
+                in_shardings=(ns(pspec), ns(ospec), ns(bspec)),
+                out_shardings=(ns(pspec), ns(ospec),
+                               NamedSharding(mesh, P()),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_sh, opt_sh, batch_sh)
+        else:
+            cache_sh = configs.cache_specs(cfg, shape, dtype=cfg.dtype)
+            cspec = fit_pspecs(cache_sh,
+                               cache_pspecs(cache_sh, daxes, kv_mode=kv_mode),
+                               mesh)
+            step = (make_prefill_step(cfg) if shape.kind == "prefill"
+                    else make_decode_step(cfg))
+            jitted = jax.jit(
+                step,
+                in_shardings=(ns(pspec), ns(cspec), ns(bspec)),
+                out_shardings=(NamedSharding(mesh, P()), ns(cspec)),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_sh, cache_sh, batch_sh)
+    return lowered.compile()
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               smoke: bool = False, donate: bool = True, fsdp: str = "auto",
+               overrides=None, kv_mode: str = "hd", grad_sync: str = "micro"):
+    """Three compiles per cell:
+      A. FULL config, scans rolled  -> memory_analysis (fits?), compile ok
+      B/C. reduced (a, b) layers, scans UNROLLED -> per-layer flops/bytes/
+           collective bytes, extrapolated linearly to the full layer count
+           (XLA cost_analysis counts while-loop bodies once, so rolled
+           numbers undercount; unrolled small compiles are exact per layer).
+    rwkv/mamba time-chunk inner scans stay rolled even in B/C — their
+    recurrence flops are <1% of the projection flops (noted in EXPERIMENTS).
+    """
+    cfg = configs.get(arch, smoke=smoke)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = configs.SHAPES[shape_name]
+    if smoke:
+        import dataclasses
+        shape = dataclasses.replace(shape, seq_len=min(shape.seq_len, 256),
+                                    global_batch=min(shape.global_batch, 16))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    daxes = data_axes(mesh)
+    n_data = 1
+    for a_ in daxes:
+        n_data *= mesh.shape[a_]
+    if shape.global_batch % n_data == 0:
+        cfg = cfg.replace(batch_axes=tuple(daxes))
+    n_dev = mesh.devices.size
+
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))))
+    per_shard_gb = n_params * 2 / mesh.shape["model"] / 2 ** 30
+    use_fsdp = (fsdp == "on") or (fsdp == "auto" and per_shard_gb > 6.0)
+    # microbatching: keep per-microbatch global batch at <=16 sequences for
+    # the 4k train cells (activation memory ~ 1/accum)
+    accum = 1
+    if shape.kind == "train" and shape.global_batch > 16:
+        accum = shape.global_batch // 16
+
+    # A: full config, rolled — memory analysis
+    t0 = time.time()
+    if cfg.moe_impl == "ep":
+        from ..models import moe as moe_mod
+        moe_mod.MESH_FOR_EP = mesh
+    compiled_full = _compile_cell(cfg, shape, mesh, daxes, donate=donate,
+                                  fsdp=use_fsdp, accum=accum, kv_mode=kv_mode,
+                                  grad_sync=grad_sync)
+    t_compile = time.time() - t0
+    mem = compiled_full.memory_analysis()
+
+    if multi_pod:
+        # multi-pod pass proves the pod axis shards; the roofline table is
+        # single-pod only (assignment spec) — skip the cost extrapolation
+        return {
+            "arch": arch, "shape": shape_name, "mesh": "2x16x16",
+            "n_devices": int(n_dev), "smoke": smoke, "kind": shape.kind,
+            "fsdp": bool(use_fsdp and shape.kind == "train"),
+            "accum": accum, "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                          None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            "roofline": {"dominant": "n/a (multi-pod compile-proof only)"},
+        }, compiled_full
+
+    # B/C: reduced-layer unrolled — cost extrapolation
+    a, b = _layer_pair(cfg)
+    a = min(a, cfg.n_layers)
+    b = min(b, cfg.n_layers)
+    costs = {}
+    for n_l in {a, b}:
+        c = _compile_cell(_reduced_cfg(cfg, n_l), shape, mesh, daxes,
+                          donate=donate, fsdp=use_fsdp, accum=accum,
+                          kv_mode=kv_mode, grad_sync=grad_sync)
+        ca = c.cost_analysis()
+        costs[n_l] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": collective_bytes(c.as_text()),
+        }
+    L = cfg.n_layers
+
+    def extrap(field):
+        if a == b:
+            return costs[a][field] * (L / a)
+        per = (costs[b][field] - costs[a][field]) / (b - a)
+        return costs[a][field] + (L - a) * per
+
+    # the accum scan body is counted once by cost analysis -> scale by accum
+    flops = extrap("flops") * accum
+    bytes_acc = extrap("bytes") * accum
+    coll = {}
+    for k in costs[a]["coll"]:
+        va, vb = costs[a]["coll"][k], costs[b]["coll"][k]
+        per = (vb - va) / (b - a) if b != a else va / a
+        tot = (va + (L - a) * per) if b != a else va * L / a
+        coll[k] = int(tot * accum)
+
+    # ACCOUNTING: post-SPMD HLO carries PER-DEVICE shapes, so all numbers
+    # here are per-device already.
+    mflops = model_flops(cfg, shape)
+    per_dev_coll = sum(v for k, v in coll.items() if k != "count")
+    roof = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": per_dev_coll / ICI_BW,
+    }
+    dom = max(roof, key=roof.get)
+    t_bound = max(roof.values())
+    roof["dominant"] = dom
+    roof["ideal_compute_s"] = mflops / n_dev / PEAK_FLOPS
+    roof["roofline_fraction"] = (roof["ideal_compute_s"] / t_bound
+                                 if t_bound else None)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev), "smoke": smoke, "kind": shape.kind,
+        "fsdp": bool(use_fsdp and shape.kind == "train"),
+        "accum": accum,
+        "compile_s": round(t_compile, 1),
+        "layer_pair": [a, b],
+        "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": bytes_acc,
+        "model_flops_total": mflops,
+        "model_over_hlo": (mflops / n_dev / flops) if flops else None,
+        "collective_bytes_per_dev": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": roof,
+    }
+    return rec, compiled_full
+
+
+def run_and_save(arch, shape_name, multi_pod, smoke, outdir,
+                 skip_existing=False):
+    meshname = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{meshname}" + ("__smoke" if smoke else "")
+    path = os.path.join(outdir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if prev.get("status") == "ok":
+            print(f"[skip] {tag}", flush=True)
+            return prev
+    try:
+        rec, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                            smoke=smoke)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        rec = {"arch": arch, "shape": shape_name, "mesh": meshname,
+               "smoke": smoke, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(outdir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[{rec['status']}] {tag}"
+          + (f" dominant={rec['roofline']['dominant']}"
+             f" compile={rec.get('compile_s')}s"
+             if rec["status"] == "ok" else f" {rec.get('error')}"),
+          flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = configs.cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, None)]
+    for arch, shape_name, skip in cells:
+        for mp in meshes:
+            run_and_save(arch, shape_name, mp, args.smoke, args.out,
+                         skip_existing=args.skip_existing)
+
+
+if __name__ == "__main__":
+    main()

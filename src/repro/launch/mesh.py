@@ -1,0 +1,20 @@
+"""Production mesh builders. Functions (not module-level constants) so that
+importing never touches jax device state — dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model); the pod axis composes
+    as an outer data-parallel axis (gradient all-reduce crosses the slower
+    inter-pod links — kept to one collective per step)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,77 @@
+"""Analytic MODEL_FLOPS per (arch x shape) — the 'useful compute' yardstick.
+
+Conventions (recorded in EXPERIMENTS.md):
+  * matmul params N_eff = all >=2D matmul weights, embeddings-as-lookup
+    excluded, unembedding included (tied embeddings add d*V once);
+  * MoE expert stacks scaled by top_k / n_experts (active fraction);
+  * zamba2's weight-shared attention block counts once per invocation
+    (n_layers // hybrid_attn_every);
+  * train = 6 * N_eff * tokens + 3 * attn_fwd;  prefill = 2 * N_eff * tokens
+    + attn_fwd;  decode = (2 * N_eff + attn_decode) per generated token;
+  * attn_fwd counts the full (uncausal) score + PV matmuls, matching what XLA
+    actually executes: 4 * B * S^2 * H * hd per attention layer.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..models import transformer as T
+
+
+def _n_eff(cfg: T.ArchConfig) -> float:
+    params_sh = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    total = 0.0
+
+    def visit(path, leaf):
+        nonlocal total
+        keys = [getattr(k, "key", str(k)) for k in path]
+        last = keys[-1]
+        if leaf.ndim < 2 and last not in ():
+            return
+        if last == "embed":
+            if cfg.tie_embeddings:
+                total += leaf.size        # reused as unembedding matmul
+            return
+        if last in ("mu", "cmu", "u", "vis_proj"):
+            return
+        frac = 1.0
+        if last.startswith("ew_"):
+            frac = cfg.top_k / cfg.n_experts
+        if "shared_attn" in keys:
+            frac = (cfg.n_layers // max(cfg.hybrid_attn_every, 1)) \
+                / max(cfg.n_layers, 1) * cfg.n_layers  # invocations
+            # shared block executes (L // every) times; its params are a
+            # single copy, so scale by invocation count
+            frac = float(cfg.n_layers // cfg.hybrid_attn_every)
+        total += leaf.size * frac
+
+    jax.tree_util.tree_map_with_path(visit, params_sh)
+    return float(total)
+
+
+def _n_attn_layers(cfg: T.ArchConfig) -> int:
+    if cfg.rwkv:
+        return 0
+    if cfg.ssm_state > 0:
+        return cfg.n_layers // max(cfg.hybrid_attn_every, 1) \
+            if cfg.hybrid_attn_every else 0
+    return cfg.n_layers
+
+
+def model_flops(cfg: T.ArchConfig, shape) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    n_eff = _n_eff(cfg)
+    h, hd = cfg.n_heads, cfg.head_dim
+    n_attn = _n_attn_layers(cfg)
+    attn_full = 4.0 * b * s * s * h * hd * n_attn
+    if cfg.enc_layers > 0:
+        attn_full += 4.0 * b * s * s * h * hd * cfg.enc_layers
+    tokens = b * s
+    if shape.kind == "train":
+        return 6.0 * n_eff * tokens + 3.0 * attn_full
+    if shape.kind == "prefill":
+        return 2.0 * n_eff * tokens + attn_full
+    # decode: one token per request against an s-deep cache
+    attn_dec = 4.0 * b * s * h * hd * n_attn
+    return 2.0 * n_eff * b + attn_dec

@@ -1,0 +1,164 @@
+"""7-layer CNN (paper Table 1: MNIST, 6 conv + 1 fc, max-pool between,
+3-bit unsigned activations everywhere, 0.98% error on chip).
+
+Works on any (B, H, W, C) input; our offline container uses the synthetic
+cluster-image dataset with MNIST-matched shapes.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from ..core.types import CIMConfig
+
+_CHANNELS = [16, 16, 32, 32, 64, 64]
+_POOL_AFTER = {1, 3, 5}          # pool after conv idx 1, 3, 5
+ACT_BITS = 3                      # 3-b unsigned
+
+
+def init(key, in_ch: int = 1, n_classes: int = 10) -> Dict:
+    keys = jax.random.split(key, 8)
+    params: Dict = {}
+    c_prev = in_ch
+    for i, c in enumerate(_CHANNELS):
+        params[f"conv{i}"] = nn.conv_init(keys[i], 3, 3, c_prev, c)
+        c_prev = c
+    params["alpha"] = jnp.full((len(_CHANNELS) + 1,), 2.0)  # learned PACT clips
+    params["fc"] = None  # lazily shaped at first apply via fc_init
+    params["_fc_key"] = keys[7]
+    return params
+
+
+def _ensure_fc(params, feat_dim, n_classes=10):
+    if params["fc"] is None:
+        params["fc"] = nn.linear_init(params["_fc_key"], feat_dim, n_classes)
+    return params
+
+
+def apply(params, x, *, key=None, noise_frac: float = 0.0, train: bool = False):
+    """Train/software path. x: (B,H,W,C) in [0,1]."""
+    keys = jax.random.split(key, 7) if key is not None else [None] * 7
+    h = nn.quant_act(x, 1.0, ACT_BITS, signed=False)
+    for i in range(len(_CHANNELS)):
+        h = nn.noisy_conv(keys[i], params[f"conv{i}"], h, noise_frac)
+        h = jax.nn.relu(h)
+        h = nn.quant_act(h, params["alpha"][i], ACT_BITS, signed=False)
+        if i in _POOL_AFTER:
+            h = nn.max_pool(h)
+    h = h.reshape(h.shape[0], -1)
+    return nn.noisy_linear(keys[6], params["fc"], h, noise_frac)
+
+
+def init_full(key, sample_x, n_classes: int = 10):
+    """init + shape the fc layer by tracing feature dims."""
+    params = init(key, in_ch=sample_x.shape[-1], n_classes=n_classes)
+    h = sample_x
+    for i in range(len(_CHANNELS)):
+        h = nn.noisy_conv(None, params[f"conv{i}"], h, 0.0)
+        if i in _POOL_AFTER:
+            h = nn.max_pool(h)
+    params = _ensure_fc(params, h.shape[1] * h.shape[2] * h.shape[3], n_classes)
+    del params["_fc_key"]
+    return params
+
+
+# ---------------------------------------------------------------- chip path
+
+def deploy(key, params, cfg: CIMConfig, x_cal, mode: str = "relaxed"):
+    """Program every layer onto the simulated chip, calibrating each layer
+    with the *previous layers' chip outputs* on training data (model-driven
+    calibration uses realistic layer inputs)."""
+    states = {}
+    keys = jax.random.split(key, 7)
+    h = nn.quant_act(x_cal, 1.0, ACT_BITS, signed=False)
+    for i in range(len(_CHANNELS)):
+        alpha_in = 1.0 if i == 0 else params["alpha"][i - 1]
+        cols = nn.im2col(h, 3, 3)
+        d = cols.shape[-1]
+        states[f"conv{i}"] = nn.deploy_linear(
+            keys[i], params[f"conv{i}"], cfg, alpha_in,
+            x_cal=cols.reshape(-1, d), mode=mode)
+        h = nn.chip_conv(states[f"conv{i}"], h, cfg, 3, 3)
+        h = jax.nn.relu(h)
+        h = nn.quant_act(h, params["alpha"][i], ACT_BITS, signed=False)
+        if i in _POOL_AFTER:
+            h = nn.max_pool(h)
+    hf = h.reshape(h.shape[0], -1)
+    states["fc"] = nn.deploy_linear(keys[6], params["fc"], cfg,
+                                    params["alpha"][5], x_cal=hf, mode=mode)
+    return states
+
+
+def chip_apply(states, params, x, cfg: CIMConfig):
+    h = nn.quant_act(x, 1.0, ACT_BITS, signed=False)
+    for i in range(len(_CHANNELS)):
+        h = nn.chip_conv(states[f"conv{i}"], h, cfg, 3, 3, seed=i)
+        h = jax.nn.relu(h)
+        h = nn.quant_act(h, params["alpha"][i], ACT_BITS, signed=False)
+        if i in _POOL_AFTER:
+            h = nn.max_pool(h)
+    h = h.reshape(h.shape[0], -1)
+    return nn.chip_linear(states["fc"], h, cfg, seed=6)
+
+
+# ------------------------------------------- chip-in-the-loop staged interface
+# stages: 0..5 = conv0..conv5, 6 = fc -> n_stages = 7
+
+N_STAGES = 7
+
+
+def chip_prefix(states, params, x, upto: int, cfg: CIMConfig = None):
+    """Chip-measured activation after `upto` programmed stages."""
+    h = nn.quant_act(x, 1.0, ACT_BITS, signed=False)
+    for i in range(min(upto, 6)):
+        h = nn.chip_conv(states[f"conv{i}"], h, cfg, 3, 3, seed=i)
+        h = jax.nn.relu(h)
+        h = nn.quant_act(h, params["alpha"][i], ACT_BITS, signed=False)
+        if i in _POOL_AFTER:
+            h = nn.max_pool(h)
+    if upto >= 7:
+        h = nn.chip_linear(states["fc"], h.reshape(h.shape[0], -1), cfg, seed=6)
+    return h
+
+
+def soft_suffix(params, h, frm: int, key=None, noise_frac: float = 0.0):
+    """Software forward from stage `frm` (input = activation after frm)."""
+    keys = jax.random.split(key, 7) if key is not None else [None] * 7
+    for i in range(frm, 6):
+        h = nn.noisy_conv(keys[i], params[f"conv{i}"], h, noise_frac)
+        h = jax.nn.relu(h)
+        h = nn.quant_act(h, params["alpha"][i], ACT_BITS, signed=False)
+        if i in _POOL_AFTER:
+            h = nn.max_pool(h)
+    if frm <= 6:
+        h = h.reshape(h.shape[0], -1)
+        h = nn.noisy_linear(keys[6], params["fc"], h, noise_frac)
+    return h
+
+
+def deploy_upto(key, params, cfg: CIMConfig, x_cal, upto: int,
+                mode: str = "relaxed"):
+    """Program only the first `upto` stages (for progressive fine-tuning)."""
+    states = {}
+    keys = jax.random.split(key, 7)
+    h = nn.quant_act(x_cal, 1.0, ACT_BITS, signed=False)
+    for i in range(min(upto, 6)):
+        alpha_in = 1.0 if i == 0 else params["alpha"][i - 1]
+        cols = nn.im2col(h, 3, 3)
+        states[f"conv{i}"] = nn.deploy_linear(
+            keys[i], params[f"conv{i}"], cfg, alpha_in,
+            x_cal=cols.reshape(-1, cols.shape[-1]), mode=mode)
+        h = nn.chip_conv(states[f"conv{i}"], h, cfg, 3, 3)
+        h = jax.nn.relu(h)
+        h = nn.quant_act(h, params["alpha"][i], ACT_BITS, signed=False)
+        if i in _POOL_AFTER:
+            h = nn.max_pool(h)
+    if upto >= 7:
+        hf = h.reshape(h.shape[0], -1)
+        states["fc"] = nn.deploy_linear(keys[6], params["fc"], cfg,
+                                        params["alpha"][5], x_cal=hf,
+                                        mode=mode)
+    return states

@@ -1,0 +1,130 @@
+"""4-parallel-cell LSTM for speech-command recognition (paper Fig. 4d).
+
+Per cell: input->gates (40 x 448), hidden->gates (112 x 448), hidden->logits
+(112 x 12); hidden size 112, 4 gates (i, g, f, o); 50 MFCC time-steps of
+length-40 vectors; classification from the sum of the 4 cells' logits.
+MVM inputs quantized to 4-b signed; element-wise gate math runs in float
+(the paper does it on the companion FPGA). The recurrent dataflow is the
+TNSA's BL->BL mode: the same programmed arrays are reused each time-step.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from ..core.types import CIMConfig
+
+N_CELLS = 4
+HIDDEN = 112
+IN_DIM = 40
+N_CLASSES = 12
+IN_BITS = 4  # 4-b signed
+
+
+def init(key, in_dim: int = IN_DIM, hidden: int = HIDDEN,
+         n_classes: int = N_CLASSES, n_cells: int = N_CELLS) -> Dict:
+    params: Dict = {"alpha_x": jnp.asarray(3.0), "alpha_h": jnp.asarray(1.0)}
+    keys = jax.random.split(key, 3 * n_cells)
+    for c in range(n_cells):
+        params[f"cell{c}_ih"] = nn.linear_init(keys[3 * c], in_dim, 4 * hidden)
+        params[f"cell{c}_hh"] = nn.linear_init(keys[3 * c + 1], hidden,
+                                               4 * hidden)
+        params[f"cell{c}_ho"] = nn.linear_init(keys[3 * c + 2], hidden,
+                                               n_classes)
+    return params
+
+
+def _gates_to_state(z, c_state, hidden):
+    i, g, f, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c_state + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def apply(params, x, *, key=None, noise_frac: float = 0.0,
+          n_cells: int = N_CELLS, hidden: int = HIDDEN):
+    """x: (B, T, F) MFCC series -> (B, n_classes) logits."""
+    b, t, f = x.shape
+    logits = 0.0
+    for c in range(n_cells):
+        kc = jax.random.fold_in(key, c) if key is not None else None
+        k1, k2, k3 = (jax.random.split(kc, 3) if kc is not None
+                      else (None, None, None))
+
+        def step(carry, xt):
+            h, cst = carry
+            xq = nn.quant_act(xt, params["alpha_x"], IN_BITS, signed=True)
+            hq = nn.quant_act(h, params["alpha_h"], IN_BITS, signed=True)
+            z = (nn.noisy_linear(k1, params[f"cell{c}_ih"], xq, noise_frac)
+                 + nn.noisy_linear(k2, params[f"cell{c}_hh"], hq, noise_frac))
+            h_new, c_new = _gates_to_state(z, cst, hidden)
+            return (h_new, c_new), None
+
+        carry0 = (jnp.zeros((b, hidden)), jnp.zeros((b, hidden)))
+        (h_fin, _), _ = jax.lax.scan(step, carry0, jnp.swapaxes(x, 0, 1))
+        hq = nn.quant_act(h_fin, params["alpha_h"], IN_BITS, signed=True)
+        logits = logits + nn.noisy_linear(k3, params[f"cell{c}_ho"], hq,
+                                          noise_frac)
+    return logits
+
+
+# ---------------------------------------------------------------- chip path
+
+def deploy(key, params, cfg: CIMConfig, x_cal, n_cells: int = N_CELLS,
+           hidden: int = HIDDEN, mode: str = "relaxed"):
+    """Program the 3 matrices of each cell. Calibration activations come from
+    a software rollout over training-set MFCCs (model-driven calibration)."""
+    states: Dict = {}
+    b, t, f = x_cal.shape
+    keys = jax.random.split(key, 3 * n_cells)
+    # collect representative (x_t, h_t) pairs from a software rollout
+    for c in range(n_cells):
+        hs, xs = [], []
+
+        def step(carry, xt):
+            h, cst = carry
+            xq = nn.quant_act(xt, params["alpha_x"], IN_BITS, signed=True)
+            hq = nn.quant_act(h, params["alpha_h"], IN_BITS, signed=True)
+            z = xq @ params[f"cell{c}_ih"]["w"] + params[f"cell{c}_ih"]["b"] \
+                + hq @ params[f"cell{c}_hh"]["w"] + params[f"cell{c}_hh"]["b"]
+            h_new, c_new = _gates_to_state(z, cst, hidden)
+            return (h_new, c_new), (xq, hq)
+
+        carry0 = (jnp.zeros((b, hidden)), jnp.zeros((b, hidden)))
+        (h_fin, _), (xqs, hqs) = jax.lax.scan(step, carry0,
+                                              jnp.swapaxes(x_cal, 0, 1))
+        x_flat = xqs.reshape(-1, f)
+        h_flat = hqs.reshape(-1, hidden)
+        states[f"cell{c}_ih"] = nn.deploy_linear(
+            keys[3 * c], params[f"cell{c}_ih"], cfg, params["alpha_x"],
+            x_cal=x_flat, mode=mode)
+        states[f"cell{c}_hh"] = nn.deploy_linear(
+            keys[3 * c + 1], params[f"cell{c}_hh"], cfg, params["alpha_h"],
+            x_cal=h_flat, mode=mode)
+        states[f"cell{c}_ho"] = nn.deploy_linear(
+            keys[3 * c + 2], params[f"cell{c}_ho"], cfg, params["alpha_h"],
+            x_cal=h_flat, mode=mode)
+    return states
+
+
+def chip_apply(states, params, x, cfg: CIMConfig, n_cells: int = N_CELLS,
+               hidden: int = HIDDEN):
+    b, t, f = x.shape
+    logits = 0.0
+    for c in range(n_cells):
+        def step(carry, xt):
+            h, cst = carry
+            z = (nn.chip_linear(states[f"cell{c}_ih"], xt, cfg, seed=3 * c)
+                 + nn.chip_linear(states[f"cell{c}_hh"], h, cfg,
+                                  seed=3 * c + 1))
+            h_new, c_new = _gates_to_state(z, cst, hidden)
+            return (h_new, c_new), None
+
+        carry0 = (jnp.zeros((b, hidden)), jnp.zeros((b, hidden)))
+        (h_fin, _), _ = jax.lax.scan(step, carry0, jnp.swapaxes(x, 0, 1))
+        logits = logits + nn.chip_linear(states[f"cell{c}_ho"], h_fin, cfg,
+                                         seed=3 * c + 2)
+    return logits

@@ -1,0 +1,161 @@
+"""Neural-network substrate over the CIM core.
+
+Every weight matrix has two execution paths:
+
+  * TRAIN path (float, differentiable): PACT-quantized activations (STE) and
+    per-step Gaussian weight-noise injection — the paper's noise-resilient
+    training (Fig. 3c). Runs the noisy_matmul Pallas kernel when jitted on
+    TPU; plain jnp here.
+  * CHIP path (inference, integer): the weight (with bias and folded batch-norm
+    merged in, paper Fig. 4c) is programmed onto simulated RRAM with the
+    bias-as-rows scheme, calibrated, and executed through the CIM datapath.
+
+Bias-as-rows (paper Methods): if the bias range is B times the weight range,
+the bias is split evenly over B appended rows driven with full-scale inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import CIMConfig
+from ..core.quant import pact_quantize
+from ..core.noise import weight_noise
+from ..core import cim as cim_api
+
+
+# ---------------------------------------------------------------- init utils
+
+def linear_init(key, n_in, n_out):
+    kw, _ = jax.random.split(key)
+    w = jax.random.normal(kw, (n_in, n_out)) * math.sqrt(2.0 / n_in)
+    return {"w": w, "b": jnp.zeros((n_out,))}
+
+
+def conv_init(key, kh, kw_, cin, cout):
+    k, _ = jax.random.split(key)
+    fan_in = kh * kw_ * cin
+    w = jax.random.normal(k, (kh, kw_, cin, cout)) * math.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,))}
+
+
+def bn_init(c):
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+# ----------------------------------------------------------- train-time path
+
+def quant_act(x, alpha, bits: int, signed: bool):
+    """PACT activation quantization with STE; identity if bits <= 0."""
+    if bits <= 0:
+        return x
+    return pact_quantize(x, alpha, bits, signed=signed)
+
+
+def noisy_linear(key, p, x, noise_frac: float):
+    w = p["w"]
+    if noise_frac > 0.0 and key is not None:
+        w = weight_noise(key, w, noise_frac)
+    return x @ w + p["b"]
+
+
+def im2col(x, kh, kw_, stride=1, padding="SAME"):
+    """x: (B,H,W,C) -> patches (B, Ho, Wo, kh*kw*C)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw_), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return patches  # channel-last: kh*kw*C
+
+
+def noisy_conv(key, p, x, noise_frac: float, stride=1, padding="SAME"):
+    kh, kw_, cin, cout = p["w"].shape
+    cols = im2col(x, kh, kw_, stride, padding)           # (B,Ho,Wo,kh*kw*cin)
+    w2 = p["w"].reshape(kh * kw_ * cin, cout)
+    if noise_frac > 0.0 and key is not None:
+        w2 = weight_noise(key, w2, noise_frac)
+    return cols @ w2 + p["b"]
+
+
+def batch_norm(p, x, train: bool, momentum=0.9, eps=1e-5):
+    """Returns (y, updated_bn_params). Reduction over all but last axis."""
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_p = dict(p, mean=momentum * p["mean"] + (1 - momentum) * mean,
+                     var=momentum * p["var"] + (1 - momentum) * var)
+    else:
+        mean, var, new_p = p["mean"], p["var"], p
+    y = (x - mean) / jnp.sqrt(var + eps) * p["gamma"] + p["beta"]
+    return y, new_p
+
+
+def fold_bn(conv_p, bn_p, eps=1e-5):
+    """Merge BN into conv weights/bias (paper Fig. 4c) for chip deployment."""
+    scale = bn_p["gamma"] / jnp.sqrt(bn_p["var"] + eps)
+    w = conv_p["w"] * scale              # broadcast over output channel
+    b = (conv_p["b"] - bn_p["mean"]) * scale + bn_p["beta"]
+    return {"w": w, "b": b}
+
+
+def max_pool(x, window=2, stride=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "VALID")
+
+
+def avg_pool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ------------------------------------------------------------- chip-sim path
+
+class ChipLinear(NamedTuple):
+    """A linear/conv (flattened) layer programmed on the simulated chip."""
+    layer: Any            # core.cim.CIMLayer
+    bias_rows: int        # rows appended for the bias
+    alpha: jax.Array      # input PACT clip used at deploy time
+    signed: bool
+
+
+def _augment_bias(w2, b, alpha, in_signed_max: float):
+    """Append bias rows: bias split over B rows driven at full-scale input."""
+    wmax = jnp.maximum(jnp.max(jnp.abs(w2)), 1e-12)
+    bmax = jnp.max(jnp.abs(b))
+    n_rows = int(jnp.maximum(1, jnp.ceil(bmax / (alpha * wmax))))
+    rows = jnp.tile((b / (n_rows * alpha))[None, :], (n_rows, 1))
+    return jnp.concatenate([w2, rows], axis=0), n_rows
+
+
+def deploy_linear(key, p, cfg: CIMConfig, alpha, x_cal=None,
+                  signed: bool = False, mode: str = "relaxed") -> ChipLinear:
+    """Program one weight matrix (+bias rows) onto simulated RRAM."""
+    w2 = p["w"] if p["w"].ndim == 2 else p["w"].reshape(-1, p["w"].shape[-1])
+    alpha = jnp.asarray(alpha, jnp.float32)
+    w_aug, n_rows = _augment_bias(w2, p["b"], alpha, alpha)
+    if x_cal is not None:
+        ones = jnp.full((x_cal.shape[0], n_rows), alpha)
+        x_cal = jnp.concatenate([x_cal.reshape(x_cal.shape[0], -1), ones], -1)
+    layer = cim_api.program(key, w_aug, cfg, in_alpha=float(alpha),
+                            x_cal=x_cal, mode=mode)
+    return ChipLinear(layer, n_rows, alpha, signed)
+
+
+def chip_linear(cl: ChipLinear, x, cfg: CIMConfig, key=None, seed: int = 0):
+    """x: (B, n_in) float -> (B, n_out) float through the chip datapath."""
+    ones = jnp.full((x.shape[0], cl.bias_rows), cl.alpha)
+    x_aug = jnp.concatenate([x, ones], axis=-1)
+    return cim_api.forward(cl.layer, x_aug, cfg, key=key, seed=seed)
+
+
+def chip_conv(cl: ChipLinear, x, cfg: CIMConfig, kh, kw_, stride=1,
+              padding="SAME", key=None, seed: int = 0):
+    cols = im2col(x, kh, kw_, stride, padding)
+    b, ho, wo, d = cols.shape
+    y = chip_linear(cl, cols.reshape(-1, d), cfg, key=key, seed=seed)
+    return y.reshape(b, ho, wo, -1)

@@ -1,0 +1,150 @@
+"""Restricted Boltzmann Machine for image recovery (paper Fig. 4e-g).
+
+794 visible units (784 pixels + 10 one-hot labels) x 120 hidden units, trained
+with contrastive divergence in software, deployed on the chip for inference:
+10 cycles of back-and-forth Gibbs sampling between visible and hidden units,
+with uncorrupted pixels clamped after each cycle; performance = L2
+reconstruction error reduction vs the corrupted input.
+
+Bidirectionality: the TNSA performs v->h in the SL->BL direction and h->v in
+BL->SL on the SAME programmed array. We embed both bias vectors in the array
+with the classic always-on-unit trick (one extra visible row holds the hidden
+biases, one extra hidden column holds the visible biases), so the array is
+(V+1) x (H+1) and is programmed ONCE — transposing a stored conductance array
+is exactly what the TNSA gives for free.
+
+Stochastic neurons: the chip injects LFSR pseudo-noise into the integrator and
+emits the comparator bit (kernel-level model: activation='stochastic'). At the
+model level we sample h ~ Bernoulli(sigmoid(.)) from the chip-measured,
+noise-bearing pre-activations — the sigmoid shaping comes from the neuron's
+counter schedule (see kernels/cim_mvm). Pixel-interleaved multi-core mapping
+(paper Fig. 4f) is exercised via core.mapping.interleave_assignment in tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from ..core.types import CIMConfig
+from ..core import cim as cim_api
+from ..core.cim import CIMLayer
+from ..core.calibration import calibrate_layer
+from ..core.quant import quantize_to_int
+
+N_VIS = 794
+N_HID = 120
+
+
+def init(key, n_vis: int = N_VIS, n_hid: int = N_HID) -> Dict:
+    kw = jax.random.split(key, 1)[0]
+    return {
+        "w": 0.01 * jax.random.normal(kw, (n_vis, n_hid)),
+        "a": jnp.zeros((n_vis,)),   # visible bias
+        "b": jnp.zeros((n_hid,)),   # hidden bias
+    }
+
+
+def cd1_update(key, params, v_data, lr=0.05, noise_frac: float = 0.0):
+    """One contrastive-divergence (CD-1) step on a batch of binary visibles."""
+    kh, kv, kh2, kn = jax.random.split(key, 4)
+    w = params["w"]
+    if noise_frac > 0.0:
+        from ..core.noise import weight_noise
+        w = weight_noise(kn, w, noise_frac)
+    ph = jax.nn.sigmoid(v_data @ w + params["b"])
+    h = jax.random.bernoulli(kh, ph).astype(jnp.float32)
+    pv = jax.nn.sigmoid(h @ w.T + params["a"])
+    v_model = jax.random.bernoulli(kv, pv).astype(jnp.float32)
+    ph2 = jax.nn.sigmoid(v_model @ w + params["b"])
+    b = v_data.shape[0]
+    dw = (v_data.T @ ph - v_model.T @ ph2) / b
+    da = jnp.mean(v_data - v_model, axis=0)
+    db = jnp.mean(ph - ph2, axis=0)
+    return {
+        "w": params["w"] + lr * dw,
+        "a": params["a"] + lr * da,
+        "b": params["b"] + lr * db,
+    }
+
+
+def gibbs_recover(key, params, v_corrupt, mask_known, n_cycles: int = 10):
+    """Software reference recovery. mask_known: 1 where pixel is trusted."""
+    v = v_corrupt
+    for i in range(n_cycles):
+        kh, kv = jax.random.split(jax.random.fold_in(key, i))
+        ph = jax.nn.sigmoid(v @ params["w"] + params["b"])
+        h = jax.random.bernoulli(kh, ph).astype(jnp.float32)
+        pv = jax.nn.sigmoid(h @ params["w"].T + params["a"])
+        v = jax.random.bernoulli(kv, pv).astype(jnp.float32)
+        v = jnp.where(mask_known, v_corrupt, v)   # clamp uncorrupted pixels
+    return pv
+
+
+# ---------------------------------------------------------------- chip path
+
+class ChipRBM(NamedTuple):
+    fwd: CIMLayer     # (V+1, H+1) direction v->h
+    bwd: CIMLayer     # (H+1, V+1) — same cells, transposed TNSA access
+
+
+def _augmented(params):
+    v, h = params["w"].shape
+    w_aug = jnp.zeros((v + 1, h + 1))
+    w_aug = w_aug.at[:v, :h].set(params["w"])
+    w_aug = w_aug.at[v, :h].set(params["b"])
+    w_aug = w_aug.at[:v, h].set(params["a"])
+    return w_aug
+
+
+def deploy(key, params, cfg: CIMConfig, v_cal, mode: str = "relaxed"
+           ) -> ChipRBM:
+    """Program the augmented array once; build fwd and bwd calibrated views."""
+    w_aug = _augmented(params)
+    k1, k2, k3 = jax.random.split(key, 3)
+    fwd = cim_api.program(k1, w_aug, cfg, in_alpha=1.0,
+                          x_cal=_aug_v(v_cal), mode=mode)
+    # The bwd view reuses the SAME programmed cells, transposed (TNSA):
+    g_pos_t, g_neg_t = fwd.g_pos.T, fwd.g_neg.T
+    norm_t = jnp.sum(g_pos_t + g_neg_t, axis=0)
+    # calibrate the bwd direction on hidden samples from a software pass
+    ph = jax.nn.sigmoid(v_cal @ params["w"] + params["b"])
+    h_cal = (ph > 0.5).astype(jnp.float32)
+    h_int, _ = quantize_to_int(_aug_h(h_cal), 1.0, cfg.in_bits, signed=True)
+    cal = calibrate_layer(k3, h_int, g_pos_t, g_neg_t, cfg)
+    bwd = CIMLayer(g_pos_t, g_neg_t, fwd.w_max, norm_t, cal.v_decr,
+                   cal.adc_offset, jnp.asarray(1.0))
+    return ChipRBM(fwd, bwd)
+
+
+def _aug_v(v):
+    return jnp.concatenate([v, jnp.ones((v.shape[0], 1))], axis=-1)
+
+
+def _aug_h(h):
+    return jnp.concatenate([h, jnp.ones((h.shape[0], 1))], axis=-1)
+
+
+def chip_gibbs_recover(key, chip: ChipRBM, cfg: CIMConfig, v_corrupt,
+                       mask_known, n_cycles: int = 10):
+    """Image recovery fully through the chip datapath (both MVM directions)."""
+    n_hid = chip.fwd.g_pos.shape[1] - 1
+    n_vis = chip.fwd.g_pos.shape[0] - 1
+    v = v_corrupt
+    pv = v_corrupt
+    for i in range(n_cycles):
+        kh, kv = jax.random.split(jax.random.fold_in(key, i))
+        logits_h = cim_api.forward(chip.fwd, _aug_v(v), cfg, seed=2 * i)[:, :n_hid]
+        h = jax.random.bernoulli(kh, jax.nn.sigmoid(logits_h)).astype(jnp.float32)
+        logits_v = cim_api.forward(chip.bwd, _aug_h(h), cfg,
+                                   seed=2 * i + 1)[:, :n_vis]
+        pv = jax.nn.sigmoid(logits_v)
+        v = jax.random.bernoulli(kv, pv).astype(jnp.float32)
+        v = jnp.where(mask_known, v_corrupt, v)
+    return pv
+
+
+def l2_error(v_rec, v_orig):
+    return jnp.mean(jnp.sum((v_rec - v_orig) ** 2, axis=-1))

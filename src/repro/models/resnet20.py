@@ -1,0 +1,209 @@
+"""ResNet-20 (paper Table 1: CIFAR-10, 21 conv + 1 fc, batch-norm folded into
+weights for chip deployment, 3-b unsigned activations, 4-b first layer).
+
+Standard He et al. CIFAR variant: stem conv(16), 3 stages x 3 blocks x 2 convs
+with widths (16, 32, 64), two 1x1 projection shortcuts, global avg pool, fc.
+= 1 + 18 + 2 + 1(fc) -> 61 conductance matrices after im2col splitting, which
+exercises the multi-core merge path of core.mapping.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from ..core.types import CIMConfig
+
+STAGES = [(16, 1), (32, 2), (64, 2)]   # (width, first-block stride)
+BLOCKS_PER_STAGE = 3
+ACT_BITS = 3
+FIRST_ACT_BITS = 4
+
+
+def init(key, in_ch: int = 3, n_classes: int = 10) -> Dict:
+    params: Dict = {"alpha": jnp.full((24,), 2.0)}
+    k = iter(jax.random.split(key, 64))
+    params["stem"] = nn.conv_init(next(k), 3, 3, in_ch, 16)
+    params["stem_bn"] = nn.bn_init(16)
+    c_prev = 16
+    for s, (c, stride) in enumerate(STAGES):
+        for b in range(BLOCKS_PER_STAGE):
+            pre = f"s{s}b{b}"
+            params[pre + "c1"] = nn.conv_init(next(k), 3, 3, c_prev, c)
+            params[pre + "bn1"] = nn.bn_init(c)
+            params[pre + "c2"] = nn.conv_init(next(k), 3, 3, c, c)
+            params[pre + "bn2"] = nn.bn_init(c)
+            if b == 0 and c != c_prev:
+                params[pre + "proj"] = nn.conv_init(next(k), 1, 1, c_prev, c)
+                params[pre + "bnp"] = nn.bn_init(c)
+            c_prev = c
+    params["fc"] = nn.linear_init(next(k), 64, n_classes)
+    return params
+
+
+def _block(params, pre, h, stride, key, noise_frac, train, alpha, new_p):
+    identity = h
+    k1, k2, k3 = (jax.random.split(key, 3) if key is not None
+                  else (None, None, None))
+    y = nn.noisy_conv(k1, params[pre + "c1"], h, noise_frac, stride=stride)
+    y, new_p[pre + "bn1"] = nn.batch_norm(params[pre + "bn1"], y, train)
+    y = nn.quant_act(jax.nn.relu(y), alpha, ACT_BITS, signed=False)
+    y = nn.noisy_conv(k2, params[pre + "c2"], y, noise_frac)
+    y, new_p[pre + "bn2"] = nn.batch_norm(params[pre + "bn2"], y, train)
+    if pre + "proj" in params:
+        identity = nn.noisy_conv(k3, params[pre + "proj"], h, noise_frac,
+                                 stride=stride)
+        identity, new_p[pre + "bnp"] = nn.batch_norm(params[pre + "bnp"],
+                                                     identity, train)
+    elif stride != 1:
+        identity = identity[:, ::stride, ::stride, :]
+    return nn.quant_act(jax.nn.relu(y + identity), alpha, ACT_BITS,
+                        signed=False)
+
+
+def apply(params, x, *, key=None, noise_frac: float = 0.0,
+          train: bool = False) -> Tuple[jax.Array, Dict]:
+    """Returns (logits, params-with-updated-bn-stats)."""
+    new_p = dict(params)
+    keys = iter(jax.random.split(key, 32) if key is not None else [None] * 32)
+    h = nn.quant_act(x, 1.0, FIRST_ACT_BITS, signed=False)
+    h = nn.noisy_conv(next(keys), params["stem"], h, noise_frac)
+    h, new_p["stem_bn"] = nn.batch_norm(params["stem_bn"], h, train)
+    h = nn.quant_act(jax.nn.relu(h), params["alpha"][0], ACT_BITS, signed=False)
+    ai = 1
+    for s, (c, stride) in enumerate(STAGES):
+        for b in range(BLOCKS_PER_STAGE):
+            h = _block(params, f"s{s}b{b}", h, stride if b == 0 else 1,
+                       next(keys), noise_frac, train, params["alpha"][ai],
+                       new_p)
+            ai += 1
+    h = nn.avg_pool_global(h)
+    logits = nn.noisy_linear(next(keys), params["fc"], h, noise_frac)
+    return logits, new_p
+
+
+def conv_layers(params) -> List[str]:
+    """Deployment order of all weight layers (for chip-in-the-loop)."""
+    names = ["stem"]
+    for s in range(len(STAGES)):
+        for b in range(BLOCKS_PER_STAGE):
+            pre = f"s{s}b{b}"
+            names.append(pre + "c1")
+            names.append(pre + "c2")
+            if pre + "proj" in params:
+                names.append(pre + "proj")
+    names.append("fc")
+    return names
+
+
+def folded_params(params) -> Dict:
+    """BN-folded weights for chip deployment (paper Fig. 4c)."""
+    fold = {}
+    fold["stem"] = nn.fold_bn(params["stem"], params["stem_bn"])
+    for s in range(len(STAGES)):
+        for b in range(BLOCKS_PER_STAGE):
+            pre = f"s{s}b{b}"
+            fold[pre + "c1"] = nn.fold_bn(params[pre + "c1"],
+                                          params[pre + "bn1"])
+            fold[pre + "c2"] = nn.fold_bn(params[pre + "c2"],
+                                          params[pre + "bn2"])
+            if pre + "proj" in params:
+                fold[pre + "proj"] = nn.fold_bn(params[pre + "proj"],
+                                                params[pre + "bnp"])
+    fold["fc"] = params["fc"]
+    return fold
+
+
+def chip_apply(states, params, x, cfg: CIMConfig):
+    """Full-chip inference with all layers programmed (BN pre-folded)."""
+    h = nn.quant_act(x, 1.0, FIRST_ACT_BITS, signed=False)
+    h = nn.chip_conv(states["stem"], h, cfg, 3, 3, seed=0)
+    h = nn.quant_act(jax.nn.relu(h), params["alpha"][0], ACT_BITS, signed=False)
+    ai, seed = 1, 1
+    for s, (c, stride) in enumerate(STAGES):
+        for b in range(BLOCKS_PER_STAGE):
+            pre = f"s{s}b{b}"
+            st = stride if b == 0 else 1
+            identity = h
+            y = nn.chip_conv(states[pre + "c1"], h, cfg, 3, 3, stride=st,
+                             seed=seed)
+            y = nn.quant_act(jax.nn.relu(y), params["alpha"][ai], ACT_BITS,
+                             signed=False)
+            y = nn.chip_conv(states[pre + "c2"], y, cfg, 3, 3, seed=seed + 1)
+            if pre + "proj" in states:
+                identity = nn.chip_conv(states[pre + "proj"], h, cfg, 1, 1,
+                                        stride=st, seed=seed + 2)
+            elif st != 1:
+                identity = identity[:, ::st, ::st, :]
+            h = nn.quant_act(jax.nn.relu(y + identity), params["alpha"][ai],
+                             ACT_BITS, signed=False)
+            ai += 1
+            seed += 3
+    h = nn.avg_pool_global(h)
+    return nn.chip_linear(states["fc"], h, cfg, seed=99)
+
+
+def deploy(key, params, cfg: CIMConfig, x_cal, mode: str = "relaxed",
+           upto: int = 10 ** 9):
+    """Program layers in order, calibrating each on the chip outputs of the
+    previous ones (progressive, used by chip-in-the-loop too). `upto` limits
+    how many layers are programmed (the rest stay in software)."""
+    fold = folded_params(params)
+    names = conv_layers(params)[:upto]
+    states: Dict = {}
+    keys = jax.random.split(key, len(names) + 1)
+    # calibration activations flow through the chip as it is built
+    h = nn.quant_act(x_cal, 1.0, FIRST_ACT_BITS, signed=False)
+    # walk the graph mirroring chip_apply, deploying on first touch
+    def dep(name, cols, alpha_in, ki):
+        d = cols.reshape(-1, cols.shape[-1])
+        states[name] = nn.deploy_linear(keys[ki], fold[name], cfg, alpha_in,
+                                        x_cal=d, mode=mode)
+    ki = 0
+    if "stem" in names:
+        dep("stem", nn.im2col(h, 3, 3), 1.0, ki)
+        h = nn.chip_conv(states["stem"], h, cfg, 3, 3)
+    else:
+        return states
+    h = nn.quant_act(jax.nn.relu(h), params["alpha"][0], ACT_BITS, signed=False)
+    ai = 1
+    for s, (c, stride) in enumerate(STAGES):
+        for b in range(BLOCKS_PER_STAGE):
+            pre = f"s{s}b{b}"
+            st = stride if b == 0 else 1
+            if pre + "c1" not in names:
+                return states
+            ki += 1
+            dep(pre + "c1", nn.im2col(h, 3, 3, stride=st),
+                params["alpha"][ai - 1], ki)
+            identity = h
+            y = nn.chip_conv(states[pre + "c1"], h, cfg, 3, 3, stride=st)
+            y = nn.quant_act(jax.nn.relu(y), params["alpha"][ai], ACT_BITS,
+                             signed=False)
+            if pre + "c2" not in names:
+                return states
+            ki += 1
+            dep(pre + "c2", nn.im2col(y, 3, 3), params["alpha"][ai], ki)
+            y = nn.chip_conv(states[pre + "c2"], y, cfg, 3, 3)
+            if pre + "proj" in fold:
+                if pre + "proj" not in names:
+                    return states
+                ki += 1
+                dep(pre + "proj", nn.im2col(h, 1, 1, stride=st),
+                    params["alpha"][ai - 1], ki)
+                identity = nn.chip_conv(states[pre + "proj"], h, cfg, 1, 1,
+                                        stride=st)
+            elif st != 1:
+                identity = identity[:, ::st, ::st, :]
+            h = nn.quant_act(jax.nn.relu(y + identity), params["alpha"][ai],
+                             ACT_BITS, signed=False)
+            ai += 1
+    if "fc" in names:
+        ki += 1
+        hf = nn.avg_pool_global(h)
+        states["fc"] = nn.deploy_linear(keys[ki], fold["fc"], cfg,
+                                        params["alpha"][ai - 1], x_cal=hf,
+                                        mode=mode)
+    return states

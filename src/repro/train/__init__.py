@@ -1,0 +1,2 @@
+from .optimizer import adamw_init, adamw_update, sgdm_init, sgdm_update, \
+    cosine_lr, clip_grads  # noqa: F401

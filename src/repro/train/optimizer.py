@@ -1,0 +1,59 @@
+"""Optimizers (pure JAX, no optax in this container): AdamW, SGD-momentum,
+cosine schedule, global-norm clipping. All operate on arbitrary pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_grads(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def cosine_lr(base_lr: float, step, total_steps: int, warmup: int = 0):
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                    0.0, 1.0)
+    return base_lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+# ------------------------------------------------------------------- AdamW
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 weight_decay=0.0):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / (jnp.sqrt(v_) + eps)
+                                    + weight_decay * p),
+        params, mh, vh)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ------------------------------------------------------------ SGD momentum
+
+def sgdm_init(params):
+    return {"mom": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+
+def sgdm_update(grads, state, params, lr, momentum=0.9, weight_decay=0.0):
+    mom = jax.tree_util.tree_map(lambda m, g: momentum * m + g,
+                                 state["mom"], grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m: p - lr * (m + weight_decay * p), params, mom)
+    return new_params, {"mom": mom}

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# keep the default 1-CPU-device view for tests (dry-run uses its own process)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

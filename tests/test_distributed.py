@@ -1,0 +1,157 @@
+"""Distribution substrate: sharding rules, checkpointing, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import repro.configs as configs
+import repro.models.transformer as T
+from repro.distributed.sharding import (param_pspecs, batch_pspecs,
+                                        cache_pspecs, fit_pspecs, zero_pspecs)
+from repro.checkpoint import (save_checkpoint, restore_checkpoint,
+                              latest_step, AsyncCheckpointer)
+from repro.distributed.fault import FaultTolerantTrainer
+
+
+def _mesh11():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_param_pspecs_cover_all_archs():
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch, smoke=True)
+        sh = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+        specs = param_pspecs(sh)
+        flat_sh = jax.tree_util.tree_leaves(sh)
+        flat_sp = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_sh) == len(flat_sp)
+        for leaf, spec in zip(flat_sh, flat_sp):
+            assert len(tuple(spec)) <= leaf.ndim
+
+
+def test_tp_rules_column_row_parallel():
+    cfg = configs.get("qwen2-72b", smoke=True)
+    sh = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_pspecs(sh)
+    # stacked layers: leading None then the 2D rule
+    assert tuple(specs["layers"]["wq"]) == (None, None, "model")
+    assert tuple(specs["layers"]["wo"]) == (None, "model", None)
+    assert tuple(specs["embed"]) == ("model", None)
+
+
+def test_fit_pspecs_downgrades_indivisible():
+    mesh = _mesh11()
+    # fake a 16-way axis via a mesh dict stub: use real mesh of 1 (divisible)
+    sh = {"u": jax.ShapeDtypeStruct((2, 2, 64), jnp.float32)}
+    spec = {"u": P(None, "model", None)}
+    fixed = fit_pspecs(sh, spec, mesh)
+    assert tuple(fixed["u"]) == (None, "model", None)  # 2 % 1 == 0 stays
+
+
+def test_zero_pspecs_adds_data_axis():
+    mesh = _mesh11()
+    sh = {"w": jax.ShapeDtypeStruct((8, 1024, 1024), jnp.float32)}
+    spec = {"w": P(None, None, "model")}
+    z = zero_pspecs(sh, spec, mesh, data_axes=("data",), min_size=1)
+    # prefers a non-leading (non-scan) dim — see zero_pspecs docstring
+    assert tuple(z["w"])[1] == "data"
+    # idempotent: applying again must not double-assign the axis
+    z2 = zero_pspecs(sh, z, mesh, data_axes=("data",), min_size=1)
+    assert tuple(z2["w"]) == tuple(z["w"])
+
+
+def test_cache_pspecs_shard_head_dim():
+    cfg = configs.get("qwen2-72b")
+    shape = configs.SHAPES["decode_32k"]
+    cache = configs.cache_specs(cfg, shape)
+    specs = cache_pspecs(cache)
+    assert tuple(specs["k"])[-1] == "model"
+    assert tuple(specs["k"])[1] == ("pod", "data")
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4))},
+            "t": jnp.zeros((), jnp.int32)}
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A step dir without manifest (simulated crash) is ignored."""
+    tree = {"a": jnp.arange(4.0)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    crashed = os.path.join(str(tmp_path), "step_00000002")
+    os.makedirs(crashed)
+    np.save(os.path.join(crashed, "arr_0.npy"), np.zeros(4))
+    assert latest_step(str(tmp_path)) == 1     # incomplete step 2 skipped
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path))
+    tree = {"w": jnp.ones((64, 64))}
+    ck.save(3, tree)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 3
+
+
+# ---------------------------------------------------------- fault tolerance
+
+def test_fault_injection_and_resume(tmp_path):
+    """Training dies at an injected fault; a fresh trainer resumes from the
+    latest checkpoint and reaches the same final state as an uninterrupted
+    run (restart-equivalence, since steps are deterministic in step index)."""
+    def step_fn(state, batch):
+        return jax.tree_util.tree_map(lambda x: x + batch, state)
+
+    def data():
+        i = 0
+        while True:
+            yield jnp.ones(()) * (1.0)
+            i += 1
+
+    state0 = {"x": jnp.zeros(())}
+    # uninterrupted reference
+    ref = {"x": jnp.zeros(())}
+    for _ in range(10):
+        ref = step_fn(ref, jnp.ones(()))
+
+    tr = FaultTolerantTrainer(step_fn, str(tmp_path), ckpt_every=2,
+                              fault_injector=lambda s: s == 7)
+    with pytest.raises(RuntimeError):
+        tr.run(state0, data(), 10)
+    assert latest_step(str(tmp_path)) is not None
+
+    tr2 = FaultTolerantTrainer(step_fn, str(tmp_path), ckpt_every=2)
+    state, start = tr2.resume(state0)
+    assert start >= 2                       # resumed from a real checkpoint
+    state, end = tr2.run(state, data(), 10, start_step=start)
+    assert end == 10
+    np.testing.assert_allclose(float(state["x"]), float(ref["x"]))
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Checkpoint saved under one (1-dev) mesh restores under another."""
+    from repro.distributed.fault import elastic_reshard
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    mesh = _mesh11()
+    from jax.sharding import NamedSharding
+    sh = {"w": NamedSharding(mesh, P("data", "model"))}
+    restored, _ = restore_checkpoint(str(tmp_path), tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh["w"]

@@ -1,0 +1,142 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs pure-jnp oracle,
+shape/dtype sweeps + hypothesis properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.types import CIMConfig, NonIdealityConfig
+from repro.core.conductance import weights_to_conductances
+from repro.kernels.cim_mvm.ref import (cim_mvm_ref, dequantize_output,
+                                       pwl_tanh_counts)
+from repro.kernels.cim_mvm.ops import cim_mvm
+from repro.kernels.noisy_matmul.ops import noisy_matmul
+from repro.kernels.prng import hash_normal, hash_uniform
+
+
+def _setup(r, c, b, key=0, wscale=0.1):
+    k = jax.random.PRNGKey(key)
+    w = jax.random.normal(k, (r, c)) * wscale
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    cond = weights_to_conductances(w, cfg.device)
+    x = jax.random.randint(jax.random.fold_in(k, 1), (b, r), -7, 8)
+    q = cim_mvm_ref(x, cond.g_pos, cond.g_neg, 1.0, cfg,
+                    bit_serial=False).q_analog
+    vd = jnp.max(jnp.abs(q)) / cfg.out_mag_levels
+    return w, cfg, cond, x, vd
+
+
+@pytest.mark.parametrize("r,c,b,blk", [
+    (64, 48, 8, (32, 32, 32)),
+    (100, 60, 5, (32, 64, 32)),      # non-divisible -> padding path
+    (256, 256, 16, (128, 128, 128)),
+    (16, 16, 1, (16, 16, 16)),
+])
+def test_kernel_matches_oracle(r, c, b, blk):
+    w, cfg, cond, x, vd = _setup(r, c, b)
+    ref = cim_mvm_ref(x, cond.g_pos, cond.g_neg, vd, cfg)
+    out = cim_mvm(x, cond.g_pos, cond.g_neg, vd, cfg, block=blk)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.counts, dtype=np.float32))
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "tanh", "sigmoid"])
+def test_kernel_activations_match(activation):
+    w, cfg, cond, x, vd = _setup(64, 32, 4)
+    cfg = dataclasses.replace(cfg, activation=activation)
+    ref = cim_mvm_ref(x, cond.g_pos, cond.g_neg, vd, cfg)
+    out = cim_mvm(x, cond.g_pos, cond.g_neg, vd, cfg, block=(32, 32, 32))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.counts, dtype=np.float32))
+
+
+def test_bit_serial_equals_folded():
+    w, cfg, cond, x, vd = _setup(48, 40, 6)
+    a = cim_mvm_ref(x, cond.g_pos, cond.g_neg, vd, cfg, bit_serial=True)
+    b = cim_mvm_ref(x, cond.g_pos, cond.g_neg, vd, cfg, bit_serial=False)
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+
+
+@settings(max_examples=20, deadline=None)
+@given(in_bits=st.integers(2, 6), out_bits=st.integers(2, 8),
+       seed=st.integers(0, 100))
+def test_adc_counts_bounded(in_bits, out_bits, seed):
+    cfg = CIMConfig(in_bits=in_bits, out_bits=out_bits)
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (32, 16)) * 0.2
+    cond = weights_to_conductances(w, cfg.device)
+    n = cfg.in_max
+    x = jax.random.randint(jax.random.fold_in(k, 1), (4, 32), -n, n + 1)
+    out = cim_mvm_ref(x, cond.g_pos, cond.g_neg, 0.001, cfg)
+    assert int(jnp.max(jnp.abs(out.counts))) <= cfg.out_mag_levels
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_dequant_tracks_true_matmul(seed):
+    """Property: calibrated chip output correlates strongly with x @ W."""
+    w, cfg, cond, x, vd = _setup(64, 32, 8, key=seed)
+    ref = cim_mvm_ref(x, cond.g_pos, cond.g_neg, vd, cfg)
+    y = dequantize_output(ref.counts, vd, cond.norm, cond.w_max, 1.0, cfg)
+    yt = x.astype(jnp.float32) @ w
+    corr = np.corrcoef(np.asarray(y).ravel(), np.asarray(yt).ravel())[0, 1]
+    assert corr > 0.98
+
+
+def test_pwl_tanh_monotonic_saturating():
+    s = jnp.arange(0, 500.0)
+    out = pwl_tanh_counts(s, 127)
+    d = jnp.diff(out)
+    assert bool(jnp.all(d >= 0))
+    assert float(out[-1]) <= 127
+    # saturating: late slope < early slope
+    assert float(out[40] - out[20]) > float(out[480] - out[460])
+
+
+def test_noisy_matmul_zero_noise_exact():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    y = noisy_matmul(x, w, 0.0, block=(16, 32, 32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-4)
+
+
+def test_noisy_matmul_statistics():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+    y = noisy_matmul(x, w, 0.1, seed=3, block=(64, 64, 64))
+    d = np.asarray(y - x @ w)
+    pred = 0.1 * float(jnp.max(jnp.abs(w))) * float(
+        jnp.sqrt(jnp.mean(jnp.sum(x ** 2, axis=1))))
+    assert 0.7 * pred < d.std() < 1.3 * pred
+    # deterministic in seed
+    y2 = noisy_matmul(x, w, 0.1, seed=3, block=(64, 64, 64))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    y3 = noisy_matmul(x, w, 0.1, seed=4, block=(64, 64, 64))
+    assert np.abs(np.asarray(y3) - np.asarray(y)).max() > 0
+
+
+def test_hash_prng_stats():
+    u = np.asarray(hash_uniform((256, 256), 1, 2))
+    assert 0.47 < u.mean() < 0.53 and u.min() >= 0 and u.max() < 1
+    n = np.asarray(hash_normal((256, 256), 7))
+    assert abs(n.mean()) < 0.02 and 0.95 < n.std() < 1.05
+    # different salts decorrelate
+    n2 = np.asarray(hash_normal((256, 256), 8))
+    assert abs(np.corrcoef(n.ravel(), n2.ravel())[0, 1]) < 0.02
+
+
+def test_stochastic_activation_probabilistic():
+    """LFSR-analogue sampling: P(out=1) increases with analog input."""
+    cfg = CIMConfig(in_bits=4, out_bits=8, activation="stochastic")
+    w = jnp.ones((16, 8)) * 0.1
+    cond = weights_to_conductances(w, cfg.device)
+    xs = [jnp.full((64, 16), v, jnp.int32) for v in (-7, 0, 7)]
+    means = []
+    for i, x in enumerate(xs):
+        out = cim_mvm(x, cond.g_pos, cond.g_neg, 0.01, cfg, seed=i,
+                      block=(64, 16, 8))
+        means.append(float(out.mean()))
+    assert means[0] < means[1] < means[2]

@@ -1,0 +1,80 @@
+"""TNSA multi-core weight-mapping planner + executor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapping import (MatrixReq, plan_layers, multicore_mvm,
+                                interleave_assignment, Tile)
+from repro.core.types import CoreSpec
+
+
+def test_single_small_matrix_one_core():
+    plan = plan_layers([MatrixReq("fc", 100, 100)])
+    assert plan.n_cores_used >= 1
+    tiles = plan.tiles_for("fc")
+    assert len(tiles) == 1 and tiles[0].rows == 100
+
+
+def test_split_oversized_matrix():
+    # 300 weight-rows -> differential 600 conductance rows -> 3 row tiles
+    plan = plan_layers([MatrixReq("big", 300, 500)])
+    tiles = plan.tiles_for("big")
+    assert sum(t.rows * t.cols for t in tiles) == 300 * 500
+    assert all(t.rows <= 128 and t.cols <= 256 for t in tiles)
+
+
+def test_duplicate_hot_layers():
+    """Paper Fig. 2a case 2: duplicate computationally intensive layers."""
+    plan = plan_layers([MatrixReq("conv1", 27, 64, intensity=16.0),
+                        MatrixReq("fc", 64, 10, intensity=1.0)])
+    assert plan.duplicated.get("conv1", 0) >= 1
+
+
+def test_resnet20_style_merge_fits_48_cores():
+    """61 conductance matrices must merge onto 48 cores (paper Methods)."""
+    reqs = []
+    for i in range(40):
+        reqs.append(MatrixReq(f"m{i}", 100, 120, intensity=1.0))
+    for i in range(21):
+        reqs.append(MatrixReq(f"s{i}", 30, 40, intensity=0.5))
+    plan = plan_layers(reqs)
+    assert plan.n_cores_used <= 48
+    assert len(plan.merged) > 0
+    # every matrix still fully mapped
+    for r in reqs:
+        tiles = plan.tiles_for(r.name)
+        assert sum(t.rows * t.cols for t in tiles) == r.rows * r.cols
+
+
+def test_over_capacity_raises():
+    # distinct row counts -> neither diagonal (sum > cap) nor horizontal
+    # (equal-rows) merging applies; 100 unmergeable tiles > 48 cores
+    reqs = [MatrixReq(f"m{i}", 29 + i, 256) for i in range(100)]
+    with pytest.raises(ValueError):
+        plan_layers(reqs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=st.integers(10, 300), c=st.integers(10, 300),
+       seed=st.integers(0, 99))
+def test_multicore_mvm_exact(r, c, seed):
+    """Property: tiled execution with exact per-tile matmul == x @ W."""
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (r, c))
+    x = jax.random.normal(jax.random.fold_in(k, 1), (4, r))
+    plan = plan_layers([MatrixReq("m", r, c)])
+    y = multicore_mvm(x, w, plan.tiles_for("m"),
+                      lambda xt, wt, t: xt @ wt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=2e-4,
+                               atol=1e-3)
+
+
+def test_interleave_equalizes_core_load():
+    """Paper Fig. 4f: adjacent pixels to different cores."""
+    assign = np.asarray(interleave_assignment(794, 8))
+    counts = np.bincount(assign)
+    assert counts.max() - counts.min() <= 1
+    # adjacent pixels never share a core (for n_units >> n_cores)
+    assert all(assign[i] != assign[i + 1] for i in range(100))

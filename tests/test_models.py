@@ -1,0 +1,119 @@
+"""Paper models: CNN-7, ResNet-20, LSTM — training, BN folding, chip parity.
+
+Accuracy thresholds are deliberately generous: the point is the RELATIVE
+structure (noise-trained model survives chip noise; chip accuracy ~= software
+accuracy), mirroring the paper's ablations on our synthetic datasets.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import CIMConfig
+from repro.data import cluster_images, keyword_mfcc
+from repro.models import cnn7, resnet20, lstm, nn
+from repro.train.noisy import train, accuracy, eval_under_noise
+
+
+@pytest.fixture(scope="module")
+def cnn_setup():
+    key = jax.random.PRNGKey(0)
+    x, y = cluster_images(key, 448, hw=16)
+    xt, yt = cluster_images(jax.random.PRNGKey(99), 128, hw=16)
+    params = cnn7.init_full(jax.random.PRNGKey(1), x[:2])
+    params, losses = train(jax.random.PRNGKey(2), params, cnn7.apply, (x, y),
+                           steps=240, batch=64, noise_frac=0.15)
+    return params, (x, y), (xt, yt)
+
+
+def test_cnn7_learns_and_is_noise_resilient(cnn_setup):
+    params, (x, y), (xt, yt) = cnn_setup
+    acc = float(accuracy(cnn7.apply(params, xt), yt))
+    assert acc > 0.7
+    sweep = eval_under_noise(jax.random.PRNGKey(3), params, cnn7.apply,
+                             (xt, yt), [0.0, 0.1])
+    assert sweep[0.1] > 0.55          # paper Fig. 3e structure
+
+
+def test_cnn7_chip_accuracy_close_to_software(cnn_setup):
+    params, (x, y), (xt, yt) = cnn_setup
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    states = cnn7.deploy(jax.random.PRNGKey(4), params, cfg, x[:24])
+    soft = float(accuracy(cnn7.apply(params, xt[:96]), yt[:96]))
+    chip = float(accuracy(cnn7.chip_apply(states, params, xt[:96], cfg),
+                          yt[:96]))
+    # 'software-comparable inference accuracy' (paper Fig. 1e) — allow a
+    # modest gap on this tiny synthetic task (the paper's full recipe incl.
+    # chip-in-the-loop closes it; see test_chip_in_loop)
+    assert chip > soft - 0.3
+    assert chip > 0.4
+
+
+def test_resnet20_forward_and_bn_fold():
+    params = resnet20.init(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 16, 16, 3))
+    logits, new_p = resnet20.apply(params, x, train=True)
+    assert logits.shape == (4, 10)
+    assert not bool(jnp.isnan(logits).any())
+    # BN running stats updated in train mode
+    assert float(jnp.abs(new_p["stem_bn"]["mean"]
+                         - params["stem_bn"]["mean"]).max()) > 0
+    # folding: eval-mode conv+bn == folded conv
+    conv, bn = params["stem"], params["stem_bn"]
+    fold = nn.fold_bn(conv, bn)
+    h = nn.noisy_conv(None, conv, x, 0.0)
+    h_bn, _ = nn.batch_norm(bn, h, train=False)
+    h_fold = nn.noisy_conv(None, fold, x, 0.0)
+    np.testing.assert_allclose(np.asarray(h_bn), np.asarray(h_fold),
+                               atol=1e-4)
+
+
+def test_resnet20_has_61_conductance_matrices():
+    """Paper Methods: ResNet-20 maps to 61 conductance matrices; our layer
+    list (pre-im2col split) has 22 weight layers; after 128-row splitting the
+    planner produces >48 tiles and must merge (see test_mapping)."""
+    params = resnet20.init(jax.random.PRNGKey(0))
+    names = resnet20.conv_layers(params)
+    assert len(names) == 22            # 21 convs + 1 fc
+    assert sum(1 for n in names if "proj" in n) == 2
+
+
+def test_lstm_learns_keywords():
+    key = jax.random.PRNGKey(0)
+    x, y = keyword_mfcc(key, 256, t=20, f=10, classes=4)
+    xt, yt = keyword_mfcc(jax.random.PRNGKey(9), 128, t=20, f=10, classes=4)
+    params = lstm.init(jax.random.PRNGKey(1), in_dim=10, hidden=24,
+                       n_classes=4, n_cells=2)
+    apply_fn = lambda p, xx, key=None, noise_frac=0.0, train=False: \
+        lstm.apply(p, xx, key=key, noise_frac=noise_frac, n_cells=2,
+                   hidden=24)
+    params, losses = train(jax.random.PRNGKey(2), params, apply_fn, (x, y),
+                           steps=150, batch=64, noise_frac=0.1, lr=3e-3)
+    acc = float(accuracy(apply_fn(params, xt), yt))
+    assert acc > 0.6
+    # chip deployment end-to-end
+    cfg = CIMConfig(in_bits=4, out_bits=8, device=CIMConfig().device)
+    states = lstm.deploy(jax.random.PRNGKey(3), params, cfg, x[:16],
+                         n_cells=2, hidden=24)
+    chip_logits = lstm.chip_apply(states, params, xt[:64], cfg, n_cells=2,
+                                  hidden=24)
+    chip_acc = float(accuracy(chip_logits, yt[:64]))
+    assert chip_acc > acc - 0.25
+
+
+def test_bias_rows_encoding():
+    """Bias-as-rows: chip linear includes bias via appended rows."""
+    cfg = CIMConfig(in_bits=6, out_bits=8)
+    key = jax.random.PRNGKey(0)
+    p = {"w": 0.1 * jax.random.normal(key, (32, 8)),
+         "b": jnp.asarray([0.5, -0.5, 0.2, 0.0, 0.1, -0.1, 0.3, -0.3])}
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    cl = nn.deploy_linear(jax.random.PRNGKey(2), p, cfg, alpha=2.0, x_cal=x,
+                          mode="ideal")
+    y = nn.chip_linear(cl, x, cfg)
+    yt = jnp.clip(x, -2, 2) @ p["w"] + p["b"]
+    corr = np.corrcoef(np.asarray(y).ravel(), np.asarray(yt).ravel())[0, 1]
+    assert corr > 0.98
+    # bias actually represented: zero input -> output ~= bias
+    y0 = nn.chip_linear(cl, jnp.zeros((4, 32)), cfg)
+    assert np.corrcoef(np.asarray(y0[0]), np.asarray(p["b"]))[0, 1] > 0.9

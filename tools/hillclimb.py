@@ -1,0 +1,79 @@
+"""Perf hillclimb driver: lower a cell with named variants, record the three
+roofline terms per variant into experiments/perf/.
+
+  PYTHONPATH=src python tools/hillclimb.py --cell qwen2_train
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+CELLS = {
+    # (arch, shape, [(variant_name, overrides, kwargs)])
+    "qwen2_train": ("qwen2-72b", "train_4k", [
+        ("baseline", {}, {}),
+        ("remat_dots", {"remat": "dots"}, {}),
+        ("seq_shard", {"seq_shard": True}, {}),
+        ("remat_dots+seq_shard", {"remat": "dots", "seq_shard": True}, {}),
+        ("remat_dots+no_fsdp", {"remat": "dots"}, {"fsdp": "off"}),
+        ("remat_dots+grad_once", {"remat": "dots"}, {"grad_sync": "once"}),
+        ("remat_dots+no_fsdp+grad_once", {"remat": "dots"},
+         {"fsdp": "off", "grad_sync": "once"}),
+    ]),
+    "deepseek_train": ("deepseek-moe-16b", "train_4k", [
+        ("baseline_sort", {}, {}),
+        ("ep_shardmap", {"moe_impl": "ep"}, {}),
+        ("ep+remat_dots", {"moe_impl": "ep", "remat": "dots"}, {}),
+    ]),
+    "qwen2_decode": ("qwen2-72b", "decode_32k", [
+        ("baseline_hd", {}, {"kv_mode": "hd"}),
+        ("kv_seq_shard", {}, {"kv_mode": "seq"}),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    arch, shape, variants = CELLS[args.cell]
+    os.makedirs("experiments/perf", exist_ok=True)
+    for name, over, kw in variants:
+        if args.variant and name != args.variant:
+            continue
+        path = f"experiments/perf/{args.cell}__{name}.json"
+        t0 = time.time()
+        try:
+            rec, _ = lower_cell(arch, shape, multi_pod=False,
+                                overrides=over, **kw)
+            rec["variant"] = name
+            rec["status"] = "ok"
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            rec = {"variant": name, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-1500:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] == "ok":
+            rf = rec["roofline"]
+            print(f"[{name}] compute={rf['compute_s']:.2f}s "
+                  f"memory={rf['memory_s']:.2f}s "
+                  f"collective={rf['collective_s']:.2f}s "
+                  f"dominant={rf['dominant']} "
+                  f"frac={rf['roofline_fraction']:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        else:
+            print(f"[{name}] ERROR {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md section Dry-run + section Roofline tables from
+experiments/dryrun/*.json. Run after the sweep:
+
+  python tools/make_experiments.py > experiments/tables.md
+"""
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def gb(x):
+    return "—" if x is None else f"{x/2**30:.2f}"
+
+
+def main():
+    recs = []
+    for p in sorted(glob.glob("experiments/dryrun/*.json")):
+        if "smoke" in p:
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+
+    print("### Dry-run results (single-pod 16x16 = 256 chips; "
+          "multi-pod 2x16x16 = 512 chips)\n")
+    print("| arch | shape | mesh | status | compile | accum | fsdp | "
+          "peak GB/dev | temp GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r.get('status','ok')} | {r.get('compile_s','—')}s | "
+              f"{r.get('accum','—')} | {r.get('fsdp','—')} | "
+              f"{gb(mem.get('peak_bytes'))} | {gb(mem.get('temp_bytes'))} |")
+
+    print("\n### Roofline terms (single-pod, per device; "
+          "197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL/HLO flops | roofline fraction |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "16x16" or r.get("status") != "ok":
+            continue
+        rf = r.get("roofline", {})
+        if "compute_s" not in rf:
+            continue
+        moh = r.get("model_over_hlo")
+        frac = rf.get("roofline_fraction")
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+              f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+              f"{rf['dominant'].replace('_s','')} | "
+              f"{'—' if moh is None else f'{moh:.2f}'} | "
+              f"{'—' if frac is None else f'{frac:.3f}'} |")
+
+    print("\n### Collective mix (single-pod, GB per device per step)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter | "
+          "all-to-all | permute |")
+    print("|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "16x16" or r.get("status") != "ok":
+            continue
+        c = r.get("collective_bytes_per_dev")
+        if not c:
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {c['all-gather']/2**30:.1f} | "
+              f"{c['all-reduce']/2**30:.1f} | "
+              f"{c['reduce-scatter']/2**30:.1f} | "
+              f"{c['all-to-all']/2**30:.1f} | "
+              f"{c['collective-permute']/2**30:.1f} |")
+
+
+if __name__ == "__main__":
+    main()
