@@ -1,0 +1,73 @@
+"""Tile-plan executor harness: per-tile loop vs packed single-dispatch.
+
+Times one layer's multi-core CIM MVM through (a) the legacy Python loop of
+per-tile kernels (`multicore_mvm`, one dynamic_slice matmul per tile) and
+(b) the packed executor (`multicore_mvm_packed`, the whole plan as one
+pallas_call), across three plan shapes. The derived column reports how many
+kernel jit traces the executor cost — the packed path's headline is ONE
+trace/dispatch per plan regardless of tile count.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CIMConfig
+from repro.core.conductance import weights_to_conductances
+from repro.core.mapping import (MatrixReq, plan_layers, pack_tiles,
+                                multicore_mvm, multicore_mvm_packed)
+from repro.kernels.cim_mvm.ops import cim_mvm
+from repro.kernels.cim_mvm.kernel import TRACE_COUNTS
+
+# (name, weight rows, cols) — 1 tile; 3x2=6 tiles; 4x3=12 tiles
+SHAPES = [("1tile", 100, 60), ("6tile", 300, 500), ("12tile", 500, 700)]
+
+
+def _time(fn, n=5):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(n):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    out = []
+    for name, r, c in SHAPES:
+        k = jax.random.PRNGKey(0)
+        w = jax.random.normal(k, (r, c)) * 0.1
+        cond = weights_to_conductances(w, cfg.device)
+        x = jax.random.randint(jax.random.fold_in(k, 1), (16, r), -7, 8)
+        vd = 0.002
+        tiles = plan_layers([MatrixReq("m", r, c)]).tiles_for("m")
+        packed = pack_tiles(tiles, cond.g_pos - cond.g_neg,
+                            gsum=cond.g_pos + cond.g_neg, v_decr=vd)
+
+        def loop_exec(xx):
+            def matmul_fn(xt, _wt, t):
+                gp = jax.lax.dynamic_slice(cond.g_pos, (t.row0, t.col0),
+                                           (t.rows, t.cols))
+                gn = jax.lax.dynamic_slice(cond.g_neg, (t.row0, t.col0),
+                                           (t.rows, t.cols))
+                return cim_mvm(xt, gp, gn, vd, cfg)
+            return multicore_mvm(xx, cond.g_pos - cond.g_neg, tiles,
+                                 matmul_fn)
+
+        t0 = TRACE_COUNTS["cim_mvm"]
+        us_loop = _time(lambda: loop_exec(x))
+        tr_loop = TRACE_COUNTS["cim_mvm"] - t0
+
+        t0 = TRACE_COUNTS["cim_mvm_packed"]
+        us_packed = _time(lambda: multicore_mvm_packed(x, packed, cfg))
+        tr_packed = TRACE_COUNTS["cim_mvm_packed"] - t0
+
+        match = bool(jnp.all(loop_exec(x) == multicore_mvm_packed(x, packed,
+                                                                  cfg)))
+        assert match, f"packed != loop on {name}"
+        out.append((f"mapping_loop_{name}_t{len(tiles)}",
+                    round(us_loop, 1), tr_loop))
+        out.append((f"mapping_packed_{name}_t{len(tiles)}",
+                    round(us_packed, 1), tr_packed))
+    return out

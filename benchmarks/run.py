@@ -5,10 +5,11 @@ import traceback
 
 def main() -> None:
     from . import (bench_energy, bench_writeverify, bench_kernel,
-                   bench_noise_training, bench_accuracy, bench_chip_in_loop,
-                   bench_roofline)
+                   bench_mapping, bench_noise_training, bench_accuracy,
+                   bench_chip_in_loop, bench_roofline)
     mods = [("energy", bench_energy), ("writeverify", bench_writeverify),
-            ("kernel", bench_kernel), ("noise_training", bench_noise_training),
+            ("kernel", bench_kernel), ("mapping", bench_mapping),
+            ("noise_training", bench_noise_training),
             ("accuracy", bench_accuracy), ("chip_in_loop", bench_chip_in_loop),
             ("roofline", bench_roofline)]
     print("name,us_per_call,derived")

@@ -1,4 +1,4 @@
-"""High-level CIM layer API — what models program onto the (simulated) chip.
+"""High-level CIM API — what models program onto the (simulated) chip.
 
 Three execution modes mirror the paper's experimental conditions:
 
@@ -9,23 +9,34 @@ Three execution modes mirror the paper's experimental conditions:
   * 'writeverify' — conductances produced by the full pulse-level write-verify
                     + iterative-relaxation simulator. Most faithful; slow.
 
-`forward` runs the fused Pallas kernel (interpret mode on CPU) and returns the
-de-normalized digital output in x @ W units, with measured ADC offsets
-cancelled — exactly the chip's digital post-processing.
+Two serving surfaces:
+
+  * `CIMEngine` — the production path. Programs + calibrates a set of weight
+    matrices once, packs each layer's TNSA tile plan (core/mapping) into
+    padded stacked tensors, and serves batched `forward` requests through a
+    SINGLE jit'd packed Pallas dispatch per layer (one trace per plan
+    shape; row-split partial sums accumulate digitally inside the kernel).
+  * `program` / `forward` — thin single-matrix wrappers kept for the
+    per-layer demos and tests: one full-matrix fused kernel (or the
+    bit-serial oracle when per-phase non-idealities are enabled), returning
+    the de-normalized digital output in x @ W units with measured ADC
+    offsets cancelled — exactly the chip's digital post-processing.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import functools
+from typing import Dict, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-from .types import CIMConfig
+from .types import CIMConfig, CoreSpec
 from .quant import quantize_to_int
 from .conductance import weights_to_conductances, program_conductances
-from .calibration import calibrate_layer, LayerCalibration
+from .calibration import calibrate_layer, calibrate_v_decr, LayerCalibration
 from .writeverify import iterative_program
-from ..kernels.cim_mvm.ops import cim_mvm
+from .mapping import MatrixReq, Plan, PackedPlan, pack_tiles, plan_layers
+from ..kernels.cim_mvm.ops import cim_mvm, cim_mvm_packed
 from ..kernels.cim_mvm.ref import cim_mvm_ref, dequantize_output
 
 
@@ -104,3 +115,160 @@ def _needs_ref(cfg: CIMConfig) -> bool:
 def effective_weight(layer: CIMLayer, cfg: CIMConfig):
     """The weight the (noisy) array actually realizes."""
     return (layer.g_pos - layer.g_neg) * layer.w_max / cfg.device.g_max
+
+
+# --------------------------------------------------------------- CIMEngine
+
+class PackedCIMLayer(NamedTuple):
+    """Pytree: one programmed layer + its packed tile plan (fold_norm=True,
+    so the packed kernel's accumulation yields de-normalized charge units)."""
+    layer: CIMLayer
+    packed: PackedPlan
+
+
+def calibrate_tile_v_decr(layer: CIMLayer, tiles, x_cal, cfg: CIMConfig,
+                          coverage: float = 0.999):
+    """Per-core ADC calibration: one v_decr per tile, covering that tile's
+    OWN normalized partial-sum distribution.
+
+    The whole-matrix v_decr from calibrate_layer is wrong for split plans:
+    a row-split tile's q_t = (x_t @ gd_t) * v_read / norm_t is distributed
+    differently from the full matrix's q (fewer summed rows, its own
+    normalizer) — the chip calibrates each core separately for exactly this
+    reason. Returns (T,) aligned with the replica-0 tiles in given order.
+    """
+    x_int, _ = quantize_to_int(x_cal, layer.in_alpha, cfg.in_bits,
+                               signed=True)
+    xf = x_int.astype(jnp.float32)
+    vds = []
+    for t in tiles:
+        if t.replica:
+            continue
+        gp = layer.g_pos[t.row0:t.row0 + t.rows, t.col0:t.col0 + t.cols]
+        gn = layer.g_neg[t.row0:t.row0 + t.rows, t.col0:t.col0 + t.cols]
+        q = (xf[:, t.row0:t.row0 + t.rows] @ (gp - gn)) * cfg.v_read \
+            / jnp.sum(gp + gn, axis=0)
+        vds.append(calibrate_v_decr(q, cfg, coverage))
+    return jnp.stack(vds)
+
+
+def pack_cim_layer(layer: CIMLayer, tiles, cfg: CIMConfig,
+                   v_decr=None) -> PackedCIMLayer:
+    """Pack a programmed CIMLayer's tiles for single-dispatch execution.
+
+    Per-tile voltage-mode normalizers are computed from the tile's own rows
+    (each tile is one physical core: norm_j = sum over that core's rows of
+    G+ + G-), and norm * v_decr is folded into denorm_tiles. Activation
+    modes whose counts are already neuron units (tanh/sigmoid/stochastic)
+    keep raw count accumulation instead.
+
+    v_decr: per-tile (T,) steps from calibrate_tile_v_decr; defaults to the
+    layer's whole-matrix step (exact for single-tile plans, a systematic
+    ADC range mismatch for split plans — prefer per-tile).
+    """
+    fold = cfg.activation not in ("tanh", "sigmoid", "stochastic")
+    packed = pack_tiles(tiles, layer.g_pos - layer.g_neg,
+                        gsum=layer.g_pos + layer.g_neg,
+                        v_decr=layer.v_decr if v_decr is None else v_decr,
+                        fold_norm=fold)
+    return PackedCIMLayer(layer, packed)
+
+
+def packed_forward(pcl: PackedCIMLayer, x, cfg: CIMConfig, *, seed=0,
+                   interpret=None):
+    """y ~= x @ W through the packed chip datapath — the functional core of
+    CIMEngine.forward, safe to call inside an outer jit (models/serving).
+
+    x: (B, R) float covering the layer's full weight-row space. The whole
+    tile plan executes as one Pallas dispatch; row-split partial sums are
+    de-normalized per core and accumulated digitally in the kernel.
+    """
+    layer, packed = pcl.layer, pcl.packed
+    x_int, scale = quantize_to_int(x, layer.in_alpha, cfg.in_bits,
+                                   signed=True)
+    acc = cim_mvm_packed(x_int, packed, cfg, seed=seed, interpret=interpret)
+    if cfg.activation in ("tanh", "sigmoid", "stochastic"):
+        return acc                     # already neuron units
+    return acc * layer.w_max * scale / (cfg.v_read * cfg.device.g_max)
+
+
+class CIMEngine:
+    """Programs + calibrates + packs a set of weight matrices once, then
+    serves batched forward requests through one jit'd dispatch per layer.
+
+    Usage:
+        eng = CIMEngine(cfg, mode="relaxed")
+        eng.program(key, {"fc1": w1, "fc2": w2})      # plan + program + pack
+        y = eng.forward("fc1", x)                     # single pallas_call
+
+    The planner allocates all matrices onto the chip's cores together
+    (split / duplicate / merge, paper Fig. 2a); each layer then executes as
+    ONE packed Pallas dispatch — a single jit trace per plan shape, so the
+    engine drops into a serving loop without per-tile retracing.
+
+    Per-phase non-idealities (IR drop, coupling, ADC offset spread) need the
+    bit-serial oracle and are not servable from the packed path; program()
+    raises for such configs — use the per-layer `forward` demo path instead.
+    """
+
+    def __init__(self, cfg: CIMConfig, spec: CoreSpec = CoreSpec(),
+                 mode: str = "relaxed", interpret: Optional[bool] = None):
+        if _needs_ref(cfg):
+            raise ValueError(
+                "CIMEngine serves the fused kernel path only; per-phase "
+                "non-idealities require the bit-serial oracle (core.forward)")
+        self.cfg = cfg
+        self.spec = spec
+        self.mode = mode
+        self.interpret = interpret
+        self.plan: Optional[Plan] = None
+        self.layers: Dict[str, PackedCIMLayer] = {}
+        # seed is a traced SMEM input, so per-call seeds never retrace
+        # (stochastic activation itself is oracle-only, rejected above —
+        # direct packed_forward users can still thread seeds)
+        self._dispatch = jax.jit(
+            functools.partial(packed_forward, cfg=cfg, interpret=interpret))
+
+    def program(self, key, weights: Dict[str, jax.Array], *,
+                reqs: Optional[Sequence[MatrixReq]] = None,
+                in_alpha: Union[float, Dict[str, float]] = 1.0,
+                x_cal: Optional[Dict[str, jax.Array]] = None) -> Plan:
+        """Plan all matrices onto the chip, program + calibrate + pack each.
+
+        weights: name -> (R, C) float weight matrix.
+        reqs: optional MatrixReqs (intensities steer duplication); defaults
+        to one plain req per weight. in_alpha: PACT clip, scalar or per-name.
+        x_cal: optional per-name (B_cal, R) calibration activations.
+        """
+        reqs = list(reqs) if reqs is not None else [
+            MatrixReq(n, int(w.shape[0]), int(w.shape[1]))
+            for n, w in weights.items()]
+        if {r.name for r in reqs} != set(weights):
+            raise ValueError("reqs names must match weights names")
+        self.layers = {}          # re-programming discards the old chip state
+        self.plan = plan_layers(reqs, self.spec)
+        for i, name in enumerate(sorted(weights)):
+            alpha = (in_alpha.get(name, 1.0)
+                     if isinstance(in_alpha, dict) else in_alpha)
+            k_layer, k_syn = jax.random.split(jax.random.fold_in(key, i))
+            # one calibration batch per layer, shared by the whole-matrix
+            # calibration (program) and the per-core ADC calibration below
+            xc = x_cal.get(name) if x_cal is not None else None
+            if xc is None:
+                xc = alpha * jax.random.truncated_normal(
+                    k_syn, -2.0, 2.0, (64, weights[name].shape[0]))
+            layer = program(k_layer, weights[name], self.cfg,
+                            in_alpha=alpha, x_cal=xc, mode=self.mode)
+            tiles = self.plan.tiles_for(name)
+            vd = calibrate_tile_v_decr(layer, tiles, xc, self.cfg)
+            self.layers[name] = pack_cim_layer(layer, tiles, self.cfg,
+                                               v_decr=vd)
+        return self.plan
+
+    def forward(self, name: str, x, *, seed: int = 0):
+        """y ~= x @ W_name via the packed dispatch (one pallas_call)."""
+        return self._dispatch(self.layers[name], x,
+                              seed=jnp.asarray(seed, jnp.int32))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.layers

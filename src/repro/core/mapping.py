@@ -1,5 +1,5 @@
-"""TNSA multi-core weight-mapping (paper Fig. 2a + Methods 'Weight mapping
-strategy onto multiple CIM cores').
+"""TNSA multi-core weight mapping: planner, tile PACKING, and executors
+(paper Fig. 2a + Methods 'Weight mapping strategy onto multiple CIM cores').
 
 A NeuRRAM chip has 48 cores of 256x256 cells; a weight matrix is first turned
 into a conductance matrix (differential rows double the height: 2R x C, plus
@@ -12,9 +12,26 @@ bias rows), then:
   * large matrices sharing rows are merged horizontally (sequential access);
   * wide matrices may be split vertically across cores to limit IR drop.
 
-The planner below reproduces these decisions and the executor runs the actual
-multi-tile CIM MVM with digital partial-sum accumulation. At datacenter scale
-the same planner operates per TP shard (a 'core' is the intra-shard unit).
+`plan_layers` reproduces these allocation decisions. Execution comes in two
+forms:
+
+  * `multicore_mvm` — the legacy per-tile Python loop (one `dynamic_slice`
+    matmul per tile). Kept as the readable reference executor; it retraces
+    per tile shape and cannot be folded into a serving-path jit cheaply.
+  * `pack_tiles` + `multicore_mvm_packed` — the tile plan as DATA, not
+    control flow. All tiles of a layer are gathered into padded stacked
+    tensors (`gd_tiles (T, bk, bn)`, `inv_norm_tiles (T, 1, bn)`,
+    `v_decr_tiles (T,)`, `denorm_tiles (T, 1, bn)`) plus static
+    `row_block/col_block/seq_slot` index tuples, and the whole layer
+    executes as ONE Pallas dispatch (`kernels/cim_mvm`) with row-split
+    partial sums accumulated digitally via output-block index maps. This is
+    what `core.cim.CIMEngine` serves from.
+
+A `PackedPlan` is a pytree whose geometry (tile index maps, block sizes) is
+static aux data: packed plans of a scanned layer stack can be stacked with
+`tree_map(jnp.stack, ...)` and sliced inside `lax.scan` without retracing.
+At datacenter scale the planner operates per TP shard (a 'core' is the
+intra-shard unit; see distributed/sharding.shard_shape).
 """
 from __future__ import annotations
 
@@ -139,6 +156,12 @@ def plan_layers(reqs: Sequence[MatrixReq], spec: CoreSpec = CoreSpec(),
             copies = min(spare // max(len(base), 1),
                          max(int(r.intensity) - 1, 0))
             for c in range(copies):
+                # budget invariant: a whole replica fits in the remaining
+                # spare cores. min() above implies it; assert rather than
+                # silently under-duplicate if planner edits ever break it
+                # (regression: test_duplication_respects_core_budget).
+                assert spare >= len(base), \
+                    f"replica overruns core budget ({spare=} < {len(base)=})"
                 for t in base:
                     extra.append(dataclasses.replace(
                         t, core=spec.n_cores - spare, replica=c + 1))
@@ -152,8 +175,160 @@ def plan_layers(reqs: Sequence[MatrixReq], spec: CoreSpec = CoreSpec(),
                 merged=merged)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedPlan:
+    """One layer's tile plan as data: padded stacked tile tensors + static
+    index maps, executable as a single Pallas dispatch.
+
+    Arrays (pytree children — may carry extra leading dims when plans of a
+    scanned layer stack are stacked together):
+      gd_tiles:       (T, bk, bn) zero-padded per-tile matrix blocks (raw
+                      weights, or folded differential conductances G+ - G-).
+      inv_norm_tiles: (T, 1, bn)  per-tile per-column voltage-mode normalizer
+                      1/sum(G+ + G-); 0 in padded columns; 1 for raw matmuls.
+      v_decr_tiles:   (T,)        per-tile ADC charge-decrement step.
+      denorm_tiles:   (T, 1, bn)  digital accumulation factor applied to each
+                      tile's ADC counts before the row-split partial-sum add:
+                      mask only (loop-executor count semantics) or
+                      mask * norm * v_decr (de-normalized charge units, the
+                      chip's digital post-processing folded into the kernel).
+
+    Static geometry (pytree aux — hashable, shared by all stacked layers):
+      row_block/col_block: tile index -> input/output block index, sorted so
+                      tiles of one output block are contiguous (the packed
+                      kernel initializes an output block on its first visit
+                      and accumulates on revisits).
+      seq_slot:       per-tile sequential-access slot from the planner
+                      (future seq-slot-aware scheduling; unused by the math).
+    """
+    layer: str
+    bk: int
+    bn: int
+    n_rows: int
+    n_cols: int
+    row_block: Tuple[int, ...]
+    col_block: Tuple[int, ...]
+    seq_slot: Tuple[int, ...]
+    gd_tiles: jax.Array
+    inv_norm_tiles: jax.Array
+    v_decr_tiles: jax.Array
+    denorm_tiles: jax.Array
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.row_block)
+
+    @property
+    def n_row_blocks(self) -> int:
+        return max(self.row_block) + 1
+
+    @property
+    def n_col_blocks(self) -> int:
+        return max(self.col_block) + 1
+
+    def tree_flatten(self):
+        children = (self.gd_tiles, self.inv_norm_tiles, self.v_decr_tiles,
+                    self.denorm_tiles)
+        aux = (self.layer, self.bk, self.bn, self.n_rows, self.n_cols,
+               self.row_block, self.col_block, self.seq_slot)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*aux, *children)
+
+
+def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
+               fold_norm: bool = False) -> PackedPlan:
+    """Gather one layer's tiles into a PackedPlan.
+
+    gd: (R, C) matrix in weight-row space — a raw weight matrix for the
+        generic executor, or folded differential conductances G+ - G- for the
+        CIM datapath.
+    gsum: optional (R, C) G+ + G- whose per-tile column sums give the
+        voltage-mode normalizer; None means normalizer 1 (raw matmul).
+    v_decr: scalar, or (T,) per-tile ADC decrement steps aligned with the
+        replica-0 tiles in the ORDER GIVEN (reordered internally together
+        with the tiles; ignored by raw matmuls).
+    fold_norm: fold mask * norm * v_decr into denorm_tiles so the packed
+        kernel's digital accumulation directly yields de-normalized charge
+        units (CIMEngine's serving path); False keeps raw summed counts
+        (bitwise-comparable with the per-tile loop executor).
+    """
+    tiles = [t for t in tiles if t.replica == 0]
+    if not tiles:
+        raise ValueError("pack_tiles needs at least one tile")
+    bk = max(t.rows for t in tiles)
+    bn = max(t.cols for t in tiles)
+    for t in tiles:
+        if t.row0 % bk or t.col0 % bn:
+            raise ValueError(
+                f"tile offsets ({t.row0},{t.col0}) not aligned to "
+                f"({bk},{bn}) blocks — not a splitter-produced plan")
+    order = sorted(range(len(tiles)),
+                   key=lambda i: (tiles[i].col0, tiles[i].row0,
+                                  tiles[i].seq_slot))
+    v_decr = jnp.broadcast_to(jnp.asarray(v_decr, jnp.float32),
+                              (len(tiles),))[jnp.asarray(order)]
+    tiles = [tiles[i] for i in order]
+    n_rows = max(t.row0 + t.rows for t in tiles)
+    n_cols = max(t.col0 + t.cols for t in tiles)
+
+    gd = jnp.asarray(gd, jnp.float32)
+    gd_tiles, inv_tiles, den_tiles = [], [], []
+    for ti, t in enumerate(tiles):
+        blk = jnp.zeros((bk, bn), jnp.float32)
+        blk = blk.at[:t.rows, :t.cols].set(
+            jax.lax.dynamic_slice(gd, (t.row0, t.col0), (t.rows, t.cols)))
+        gd_tiles.append(blk)
+        mask = jnp.zeros((bn,), jnp.float32).at[:t.cols].set(1.0)
+        if gsum is None:
+            inv = mask                       # normalizer 1 on valid columns
+            norm = mask
+        else:
+            norm_t = jnp.sum(jax.lax.dynamic_slice(
+                gsum, (t.row0, t.col0), (t.rows, t.cols)), axis=0)
+            norm = jnp.zeros((bn,), jnp.float32).at[:t.cols].set(norm_t)
+            inv = jnp.where(norm > 0, 1.0 / jnp.maximum(norm, 1e-30), 0.0)
+        den_tiles.append((mask * norm * v_decr[ti]) if fold_norm else mask)
+        inv_tiles.append(inv)
+
+    return PackedPlan(
+        layer=tiles[0].layer, bk=bk, bn=bn, n_rows=n_rows, n_cols=n_cols,
+        row_block=tuple(t.row0 // bk for t in tiles),
+        col_block=tuple(t.col0 // bn for t in tiles),
+        seq_slot=tuple(t.seq_slot for t in tiles),
+        gd_tiles=jnp.stack(gd_tiles),
+        inv_norm_tiles=jnp.stack(inv_tiles)[:, None, :],
+        v_decr_tiles=v_decr,
+        denorm_tiles=jnp.stack(den_tiles)[:, None, :])
+
+
+def multicore_mvm_packed(x, packed: PackedPlan, cfg=None, *, seed=0,
+                         interpret=None):
+    """Execute a whole layer's tile plan in ONE compiled Pallas dispatch.
+
+    cfg=None: exact tiled matmul (identity epilogue) — returns x @ W in f32,
+    bitwise-stable under the zero padding. With a CIMConfig: the full CIM
+    datapath (quantized ADC counts accumulated per denorm_tiles semantics).
+    Row-split partial sums accumulate digitally inside the kernel via
+    output-block index maps; there is no Python loop and a single jit trace
+    per plan shape.
+    """
+    from ..kernels.cim_mvm.ops import cim_mvm_packed, packed_call
+    if cfg is not None:
+        return cim_mvm_packed(x, packed, cfg, seed=seed, interpret=interpret)
+    return packed_call(x, packed, activation="identity", n_max=1,
+                       v_read=1.0, seed=seed, interpret=interpret)
+
+
 def multicore_mvm(x, weight, plan_tiles: Sequence[Tile], matmul_fn):
     """Execute y = x @ weight tile-by-tile with digital partial sums.
+
+    The legacy per-tile LOOP executor, kept as the readable reference (and
+    for exotic per-tile matmul_fn experiments). It emits one dynamic_slice
+    matmul per tile — use pack_tiles + multicore_mvm_packed on hot paths.
 
     matmul_fn(x_tile, w_tile, tile) -> (B, tile.cols) performs one core's CIM
     MVM (any mode: exact / noisy / chip-sim). Row-split partial sums are

@@ -155,6 +155,25 @@ def zero_pspecs(shape_tree, spec_tree, mesh: Mesh,
     return jax.tree_util.tree_map(fix, shape_tree, spec_tree)
 
 
+def shard_shape(shape, spec: P, mesh_shape: Dict[str, int]):
+    """Local (per-shard) shape of a tensor sharded by `spec` on a mesh of
+    {axis_name: size}. The CIM packer plans per TP shard — a NeuRRAM 'core'
+    is an intra-shard unit, so the tile plan must see the LOCAL projection
+    shape, not the global one (models/nn.deploy_transformer_cim)."""
+    parts = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    out = []
+    for dim, ax in zip(shape, parts):
+        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        n = 1
+        for a in axes:
+            n *= mesh_shape.get(a, 1)
+        if dim % n:
+            raise ValueError(f"dim {dim} not divisible by mesh axes {axes} "
+                             f"(product {n})")
+        out.append(dim // n)
+    return tuple(out)
+
+
 def named_shardings(mesh: Mesh, spec_tree):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -1,2 +1,10 @@
+"""NeuRRAM CIM MVM kernels: fused single-core op + packed whole-layer op.
+
+`cim_mvm` runs one core's worth of conductances through the fused datapath;
+`cim_mvm_packed` executes an entire TNSA tile plan (core/mapping.PackedPlan)
+as one Pallas dispatch with in-kernel digital partial-sum accumulation —
+the serving path behind core.cim.CIMEngine. `cim_mvm_ref` is the
+bit-accurate jnp oracle (bit-serial pulses + per-phase non-idealities).
+"""
 from .ref import cim_mvm_ref, adc_convert, pwl_tanh_counts  # noqa: F401
-from .ops import cim_mvm  # noqa: F401
+from .ops import cim_mvm, cim_mvm_packed  # noqa: F401

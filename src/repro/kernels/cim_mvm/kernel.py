@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused NeuRRAM CIM MVM (matmul + voltage-mode
+"""Pallas TPU kernels: fused NeuRRAM CIM MVM (matmul + voltage-mode
 normalization + ADC quantization + activation epilogue).
 
 TPU adaptation (DESIGN.md section 2): the chip's motivation is avoiding data
@@ -7,10 +7,26 @@ conductance-normalization, ADC charge-decrement quantization and the fused
 activation — in VMEM/VREGs as an epilogue of the MXU matmul, so the analog
 charge `q` never round-trips to HBM.
 
-The bit-serial input loop of the chip is algebraically folded here
-(sum_k 2^k p_k = x_int, exact for the linear datapath); per-phase non-ideality
-studies use the jnp oracle in ref.py. Grid iterates K innermost with a VMEM
-f32 accumulator; the epilogue fires on the last K step.
+Two kernels share that epilogue:
+
+  * `cim_mvm_pallas` — one (M, K) x (K, N) MVM on a single core's worth of
+    conductances. Grid (i, j, k) iterates K innermost with a VMEM f32
+    accumulator; the epilogue fires on the last K step.
+  * `cim_mvm_packed_pallas` — a whole LAYER of the TNSA tile plan
+    (core/mapping.PackedPlan) in one dispatch. The grid gains a leading
+    tile dimension (i, t) over padded stacked tile tensors
+    `gd_tiles (T, bk, bn)`; scalar-prefetched `row_block/col_block` index
+    arrays steer each tile's input block and output block (grouped-matmul
+    style), and row-split partial sums accumulate digitally INTO the output
+    block: tiles are pre-sorted so all tiles of one output block are
+    consecutive grid steps — the first zero-initializes the block, the rest
+    add `counts * denorm`. This replaces the per-tile Python loop executor
+    (one trace, one dispatch, batching-friendly) and is what CIMEngine
+    serves from.
+
+The bit-serial input loop of the chip is algebraically folded in both
+(sum_k 2^k p_k = x_int, exact for the linear datapath); per-phase
+non-ideality studies use the jnp oracle in ref.py.
 """
 from __future__ import annotations
 
@@ -22,6 +38,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..prng import hash_uniform
+
+# Trace counters (incremented while jit TRACES each wrapper, not per call):
+# tests and benchmarks assert "one compiled dispatch per plan shape" with
+# these. Keyed by kernel name.
+TRACE_COUNTS = {"cim_mvm": 0, "cim_mvm_packed": 0}
 
 
 def _pwl_tanh(steps, n_max: float):
@@ -40,6 +61,8 @@ def _pwl_tanh(steps, n_max: float):
 
 
 def _epilogue(q, vd, activation: str, n_max: int, seed_ref=None, ij=(0, 0)):
+    if activation == "identity":
+        return q                   # raw charge passthrough (exact matmul)
     sign = jnp.sign(q)
     # charge-decrement count: round-to-nearest (comparator flips mid-step)
     steps = jnp.floor(jnp.abs(q) / vd + 0.5)
@@ -88,6 +111,7 @@ def cim_mvm_pallas(x, gd, inv_norm, v_decr, seed, *, activation: str = "none",
     """x:(M,K) f32 integer-valued; gd:(K,N) f32; inv_norm:(N,) f32;
     v_decr: scalar f32; seed: scalar int32 (stochastic activation only).
     Returns (M,N) f32 ADC counts."""
+    TRACE_COUNTS["cim_mvm"] += 1
     m, kdim = x.shape
     _, n = gd.shape
     bm, bk, bn = min(bm, m), min(bk, kdim), min(bn, n)
@@ -123,3 +147,91 @@ def cim_mvm_pallas(x, gd, inv_norm, v_decr, seed, *, activation: str = "none",
       jnp.asarray(v_decr, jnp.float32).reshape(1),
       jnp.asarray(seed, jnp.int32).reshape(1))
     return out[:m, :n]
+
+
+# ----------------------------------------------------------- packed executor
+
+def _cim_packed_kernel(row_ref, col_ref, x_ref, gd_ref, invn_ref, den_ref,
+                       vd_ref, seed_ref, out_ref, *, v_read: float,
+                       activation: str, n_max: int):
+    """One grid step = one (batch block, tile) pair.
+
+    Tiles are pre-sorted by output block (PackedPlan invariant), so all
+    tiles landing in out block col_ref[t] are consecutive in t: the first
+    visit zero-initializes the block, every visit accumulates the tile's
+    (masked, optionally de-normalized) ADC counts — the chip's digital
+    row-split partial-sum accumulation, done inside the dispatch.
+    """
+    t = pl.program_id(1)
+    first = jnp.logical_or(
+        t == 0, col_ref[jnp.maximum(t - 1, 0)] != col_ref[t])
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = jnp.dot(x_ref[...], gd_ref[0],
+                preferred_element_type=jnp.float32) * v_read * invn_ref[0]
+    counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
+                       ij=(pl.program_id(0), t))
+    out_ref[...] += counts * den_ref[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("row_block", "col_block", "activation", "n_max",
+                     "v_read", "bm", "interpret"))
+def cim_mvm_packed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
+                          v_decr_tiles, seed, *,
+                          row_block, col_block, activation: str = "none",
+                          n_max: int = 127, v_read: float = 0.5,
+                          bm: int = 256, interpret: bool = False):
+    """Whole-layer packed CIM MVM: ONE pallas_call over every tile.
+
+    x:(M,K) f32 integer-valued activations (K = layer weight rows);
+    gd_tiles:(T,bk,bn); inv_norm_tiles/denorm_tiles:(T,1,bn);
+    v_decr_tiles:(T,); row_block/col_block: static tile->block index tuples
+    (scalar-prefetched into the kernel's index maps). Returns
+    (M_padded, n_col_blocks*bn) f32 — caller slices to (M, C).
+    """
+    TRACE_COUNTS["cim_mvm_packed"] += 1
+    m, kdim = x.shape
+    n_tiles, bk, bn = gd_tiles.shape
+    bm = min(bm, m)
+    n_row_blocks = max(row_block) + 1
+    n_col_blocks = max(col_block) + 1
+
+    def pad(a, mults):
+        pads = [(0, -s % t) for s, t in zip(a.shape, mults)]
+        return jnp.pad(a, pads) if any(p[1] for p in pads) else a
+
+    xp = pad(x, (bm, 1))
+    xp = jnp.pad(xp, ((0, 0), (0, n_row_blocks * bk - kdim))) \
+        if kdim < n_row_blocks * bk else xp
+    mp = xp.shape[0]
+
+    row_idx = jnp.asarray(row_block, jnp.int32)
+    col_idx = jnp.asarray(col_block, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(mp // bm, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, t, row, col: (i, row[t])),
+            pl.BlockSpec((1, bk, bn), lambda i, t, row, col: (t, 0, 0)),
+            pl.BlockSpec((1, 1, bn), lambda i, t, row, col: (t, 0, 0)),
+            pl.BlockSpec((1, 1, bn), lambda i, t, row, col: (t, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, t, row, col: (i, col[t])),
+    )
+    return pl.pallas_call(
+        functools.partial(_cim_packed_kernel, v_read=v_read,
+                          activation=activation, n_max=n_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, n_col_blocks * bn), jnp.float32),
+        interpret=interpret,
+    )(row_idx, col_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
+      v_decr_tiles.astype(jnp.float32),
+      jnp.asarray(seed, jnp.int32).reshape(1))

@@ -1,17 +1,24 @@
-"""Jit'd public wrapper around the CIM MVM Pallas kernel.
+"""Jit'd public wrappers around the CIM MVM Pallas kernels.
 
-`cim_mvm` is the fast path used by models in chip-sim mode. It consumes the
-*folded* representation (differential conductance gd = g_pos - g_neg and the
-per-column normalizer) and returns signed ADC counts. On this CPU container it
-runs the kernel in interpret mode; on TPU set interpret=False (default chosen
-from backend).
+`cim_mvm` is the single-matrix fast path used by models in chip-sim mode. It
+consumes the *folded* representation (differential conductance gd = g_pos -
+g_neg and the per-column normalizer) and returns signed ADC counts.
+
+`cim_mvm_packed` executes a whole layer's TNSA tile plan
+(core/mapping.PackedPlan) in one compiled dispatch — the serving path used
+by core.cim.CIMEngine. Row-split partial sums are accumulated digitally
+inside the kernel; per-tile counts are weighted by the plan's denorm_tiles
+(valid-column mask, optionally with norm * v_decr folded in).
+
+On this CPU container the kernels run in interpret mode; on TPU set
+interpret=False (default chosen from backend).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import cim_mvm_pallas
+from .kernel import cim_mvm_pallas, cim_mvm_packed_pallas
 from ...core.types import CIMConfig
 
 
@@ -38,3 +45,41 @@ def cim_mvm(x_int, g_pos, g_neg, v_decr, cfg: CIMConfig, *, seed=0,
         jnp.asarray(v_decr, jnp.float32), jnp.asarray(seed, jnp.int32),
         activation=cfg.activation, n_max=cfg.out_mag_levels,
         v_read=cfg.v_read, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
+                seed=0, bm=256, interpret=None):
+    """Single entry point to the packed kernel: validates the plan/input
+    fit, runs ONE pallas_call over every tile, slices the padding off.
+    All packed executors (CIM and raw-matmul) funnel through here so the
+    padding and error contracts cannot drift apart."""
+    if x.shape[-1] != packed.n_rows:
+        raise ValueError(
+            f"input has {x.shape[-1]} features but plan "
+            f"'{packed.layer}' covers {packed.n_rows} weight rows")
+    if interpret is None:
+        interpret = _default_interpret()
+    out = cim_mvm_packed_pallas(
+        x.astype(jnp.float32), packed.gd_tiles, packed.inv_norm_tiles,
+        packed.denorm_tiles, packed.v_decr_tiles,
+        jnp.asarray(seed, jnp.int32),
+        row_block=packed.row_block, col_block=packed.col_block,
+        activation=activation, n_max=n_max, v_read=v_read, bm=bm,
+        interpret=interpret)
+    return out[:x.shape[0], :packed.n_cols]
+
+
+def cim_mvm_packed(x_int, packed, cfg: CIMConfig, *, seed=0, bm=256,
+                   interpret=None):
+    """Packed whole-layer CIM MVM: one pallas_call for every tile of the
+    plan, returning the digitally-accumulated (B, C) float32 output — summed
+    ADC counts when the plan was packed with fold_norm=False (loop-executor
+    semantics), or de-normalized charge units (counts * norm * v_decr summed
+    over row splits) when packed with fold_norm=True (CIMEngine serving).
+
+    x_int: (B, R) integer-valued activations covering the layer's full
+    weight-row space; packed: core.mapping.PackedPlan.
+    """
+    return packed_call(x_int, packed, activation=cfg.activation,
+                       n_max=cfg.out_mag_levels, v_read=cfg.v_read,
+                       seed=seed, bm=bm, interpret=interpret)

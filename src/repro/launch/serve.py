@@ -8,6 +8,13 @@ once, then decoded token-by-token (greedy) with the cache updated in place
 (donated). Reports prefill and per-token decode latency. On the production
 mesh the cache shards (batch over data axes, head_dim over model) per
 distributed/sharding.py.
+
+--cim routes every dense-block linear projection through the packed NeuRRAM
+CIM engine (core.cim.CIMEngine): each layer's weights are planned onto
+simulated RRAM cores, programmed + calibrated + packed once before serving,
+and every projection then executes as ONE Pallas dispatch inside the
+prefill/decode jits — chip-sim inference as a serving scenario, not a
+per-layer demo. Plans are built per TP shard (distributed/sharding).
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ import jax.numpy as jnp
 
 from .. import configs
 from ..models import transformer as T
+from ..models import nn
 from ..data import lm_tokens
 from .steps import make_decode_step
 
@@ -30,12 +38,29 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cim", action="store_true",
+                    help="serve dense-block projections through the packed "
+                         "CIM engine (programs the chip before serving)")
+    ap.add_argument("--cim-mode", default="ideal",
+                    choices=["ideal", "relaxed", "writeverify"],
+                    help="conductance programming fidelity for --cim")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     cfg = cfg.replace(dtype=jnp.float32 if args.smoke else cfg.dtype)
+    if args.cim:
+        cfg = cfg.replace(cim_mode="packed", dtype=jnp.float32)
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, cfg)
+    if args.cim:
+        t0 = time.time()
+        params = nn.deploy_transformer_cim(
+            jax.random.PRNGKey(7), params, cfg, mode=args.cim_mode,
+            mesh_shape={"model": 1})
+        n_packed = sum(1 for k in params["layers"] if k.endswith("_cim"))
+        print(f"cim: programmed+packed {n_packed} projection stacks "
+              f"x {cfg.n_layers} layers ({args.cim_mode}) "
+              f"in {time.time() - t0:.1f}s")
     max_len = args.prompt_len + args.gen + (cfg.vis_patches or 0)
     cache = T.init_cache(cfg, args.batch, max_len, dtype=cfg.dtype)
     prompts = lm_tokens(jax.random.PRNGKey(1), args.batch, args.prompt_len,
@@ -67,7 +92,9 @@ def main(argv=None):
     tok.block_until_ready()
     t_decode = (time.time() - t0) / max(args.gen - 1, 1)
     out = jnp.concatenate(generated, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} prefill={t_prefill*1e3:.1f}ms "
+    tag = " cim=packed" if args.cim else ""
+    print(f"arch={cfg.name}{tag} batch={args.batch} "
+          f"prefill={t_prefill*1e3:.1f}ms "
           f"decode={t_decode*1e3:.1f}ms/tok "
           f"throughput={args.batch/t_decode:.1f} tok/s")
     print("sample token ids:", out[0, :16].tolist())

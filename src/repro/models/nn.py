@@ -159,3 +159,89 @@ def chip_conv(cl: ChipLinear, x, cfg: CIMConfig, kh, kw_, stride=1,
     b, ho, wo, d = cols.shape
     y = chip_linear(cl, cols.reshape(-1, d), cfg, key=key, seed=seed)
     return y.reshape(b, ho, wo, -1)
+
+
+# --------------------------------------------- packed CIM serving (engine)
+
+# Dense-block projection matrices the packed engine can serve. MoE expert
+# stacks and recurrent mixes keep the float path (future work — ROADMAP).
+PACKED_PROJ_KEYS = ("wq", "wk", "wv", "wo", "w_g", "w_i", "w_o")
+
+
+def deploy_packed_stack(key, stacked_w: Dict[str, jax.Array],
+                        ccfg: CIMConfig, *, mode: str = "ideal",
+                        in_alpha: float = 3.0, spec=None
+                        ) -> Dict[str, Any]:
+    """Program a scanned layer stack's weight matrices onto packed engines.
+
+    stacked_w: name -> (L, R, C) stacked weights (one scan step per layer),
+    already sliced to the local TP shard if sharded (deploy_transformer_cim
+    does this via distributed/sharding.shard_shape).
+    Each layer index gets its own CIMEngine (one chip per transformer
+    layer): all of that layer's matrices are planned onto the cores
+    together, programmed, calibrated and packed ONCE. The resulting per-
+    layer PackedCIMLayer pytrees are stacked back over L — their static
+    plan geometry is pytree aux data, so `lax.scan` slices them without
+    retracing and every projection stays a single Pallas dispatch per step.
+    """
+    from ..core.types import CoreSpec
+    names = sorted(stacked_w)
+    n_layers = stacked_w[names[0]].shape[0]
+    spec = spec or CoreSpec()
+
+    per_layer = []
+    for li in range(n_layers):
+        eng = cim_api.CIMEngine(ccfg, spec, mode=mode)
+        eng.program(jax.random.fold_in(key, li),
+                    {n: stacked_w[n][li].astype(jnp.float32)
+                     for n in names},
+                    in_alpha=in_alpha)
+        per_layer.append(eng.layers)
+    return {n: jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[pl[n] for pl in per_layer])
+        for n in names}
+
+
+def packed_linear(pcl, x, ccfg: CIMConfig, *, seed: int = 0):
+    """x: (B, n_in) float -> (B, n_out) float through one packed dispatch.
+    pcl: a (scan-sliced) core.cim.PackedCIMLayer."""
+    return cim_api.packed_forward(pcl, x.astype(jnp.float32), ccfg,
+                                  seed=seed)
+
+
+def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
+                           in_alpha: float = 3.0,
+                           mesh_shape: Optional[Dict[str, int]] = None):
+    """Program every dense-block linear projection of a transformer onto
+    packed CIM engines and return params augmented with '<name>_cim'
+    entries (stacked PackedCIMLayer pytrees) that models/transformer routes
+    through when arch_cfg.cim_mode == "packed".
+
+    Plans are built per TP shard via distributed/sharding.param_pspecs +
+    shard_shape (a 'core' is an intra-shard unit); with a 1-way model axis
+    the local shape is the global one.
+    """
+    if "layers" not in params or "wq" not in params["layers"]:
+        raise ValueError("packed CIM serving currently covers dense "
+                         "attention+MLP stacks (params['layers']['wq'])")
+    ccfg = CIMConfig(in_bits=arch_cfg.cim_in_bits,
+                     out_bits=arch_cfg.cim_out_bits)
+    stacked = {n: params["layers"][n] for n in PACKED_PROJ_KEYS
+               if n in params["layers"]}
+    if mesh_shape:
+        # per-TP-shard planning: slice shard 0's local projection (tp>1
+        # serving runs one engine per shard; the plan is shard-local)
+        from ..distributed.sharding import param_pspecs, shard_shape
+        specs = param_pspecs({"layers": stacked})["layers"]
+        stacked = {
+            n: w[:, :shard_shape(w.shape, specs[n], mesh_shape)[1],
+                 :shard_shape(w.shape, specs[n], mesh_shape)[2]]
+            for n, w in stacked.items()}
+    packed = deploy_packed_stack(key, stacked, ccfg, mode=mode,
+                                 in_alpha=in_alpha)
+    new_layers = dict(params["layers"])
+    for n, pcl in packed.items():
+        new_layers[n + "_cim"] = pcl
+    out = dict(params)
+    out["layers"] = new_layers
+    return out

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core.quant import pact_quantize
+from ..core.types import CIMConfig
+from ..core.cim import packed_forward
 from ..kernels.prng import hash_normal
 
 
@@ -79,7 +81,9 @@ class ArchConfig:
     moe_impl: str = "sort"       # sort (pjit global dispatch) | ep (shard_map
                                  # all_to_all expert parallelism)
     # NeuRRAM CIM technique (paper): off | noisy (training noise-injection) |
-    # chipsim (quantized bit-serial MVM + conductance noise surrogate)
+    # chipsim (quantized bit-serial MVM + conductance noise surrogate) |
+    # packed (serve dense-block projections through the packed CIM engine —
+    # one Pallas dispatch per projection; see models/nn.deploy_transformer_cim)
     cim_mode: str = "off"
     cim_in_bits: int = 4
     cim_out_bits: int = 8
@@ -95,7 +99,7 @@ class ArchConfig:
 
 # --------------------------------------------------------------- CIM linear
 
-def cim_linear(x, w, cfg: ArchConfig, *, seed: int = 0):
+def cim_linear(x, w, cfg: ArchConfig, *, seed: int = 0, packed=None):
     """Route a matmul through the paper's technique, selected by cim_mode.
 
     off:     plain x @ w.
@@ -106,8 +110,20 @@ def cim_linear(x, w, cfg: ArchConfig, *, seed: int = 0):
              weight + relaxation-noise, and ADC output quantization. Matches
              the bit-accurate oracle to first order while staying a single
              matmul (the full oracle lives in kernels/cim_mvm/ref.py).
+    packed:  the real programmed chip datapath, served by the packed-tile
+             executor — `packed` is this projection's (scan-sliced)
+             PackedCIMLayer from nn.deploy_transformer_cim; the whole tile
+             plan runs as ONE Pallas dispatch inside the serving jit.
     """
-    if cfg.cim_mode == "off":
+    if cfg.cim_mode == "packed" and packed is not None:
+        ccfg = CIMConfig(in_bits=cfg.cim_in_bits, out_bits=cfg.cim_out_bits)
+        shape = x.shape
+        y = packed_forward(packed, x.reshape(-1, shape[-1]).astype(
+            jnp.float32), ccfg, seed=seed)
+        return y.reshape(*shape[:-1], y.shape[-1]).astype(x.dtype)
+    if cfg.cim_mode in ("off", "packed"):
+        # packed mode without a deployed plan (encoder, unembed, MoE expert
+        # stacks) keeps the float path
         return x @ w
     if cfg.cim_mode == "noisy":
         wmax = jnp.max(jnp.abs(w)).astype(w.dtype)
@@ -249,11 +265,13 @@ def attention(q, k, v, *, causal: bool, q_pos, kv_pos, window=0,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
-def mlp(x, wi, wg, wo, cfg: ArchConfig, seed=0):
-    """SwiGLU MLP (all assigned dense archs use gated-silu variants)."""
-    h = jax.nn.silu(cim_linear(x, wg, cfg, seed=seed)) \
-        * cim_linear(x, wi, cfg, seed=seed + 1)
-    return cim_linear(h, wo, cfg, seed=seed + 2)
+def mlp(x, wi, wg, wo, cfg: ArchConfig, seed=0, packed=(None, None, None)):
+    """SwiGLU MLP (all assigned dense archs use gated-silu variants).
+    packed: optional (w_i, w_g, w_o) PackedCIMLayers (cim_mode="packed")."""
+    pi, pg, po = packed
+    h = jax.nn.silu(cim_linear(x, wg, cfg, seed=seed, packed=pg)) \
+        * cim_linear(x, wi, cfg, seed=seed + 1, packed=pi)
+    return cim_linear(h, wo, cfg, seed=seed + 2, packed=po)
 
 
 # ------------------------------------------------------------ param init
@@ -362,9 +380,12 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
     b, s, d = x.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     h = rms_norm(x, p["ln1"])
-    q = cim_linear(h, p["wq"], cfg, seed=1).reshape(b, s, nh, hd)
-    k = cim_linear(h, p["wk"], cfg, seed=2).reshape(b, s, nkv, hd)
-    v = cim_linear(h, p["wv"], cfg, seed=3).reshape(b, s, nkv, hd)
+    q = cim_linear(h, p["wq"], cfg, seed=1,
+                   packed=p.get("wq_cim")).reshape(b, s, nh, hd)
+    k = cim_linear(h, p["wk"], cfg, seed=2,
+                   packed=p.get("wk_cim")).reshape(b, s, nkv, hd)
+    v = cim_linear(h, p["wv"], cfg, seed=3,
+                   packed=p.get("wv_cim")).reshape(b, s, nkv, hd)
     if cfg.qkv_bias:
         q = q + p["bq"].reshape(nh, hd)
         k = k + p["bk"].reshape(nkv, hd)
@@ -396,7 +417,8 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
         kv_pos = positions
         attn = _attention_window(q, k, v, positions, kv_pos, window, cfg,
                                  causal=True)
-    x = x + cim_linear(attn.reshape(b, s, nh * hd), p["wo"], cfg, seed=4)
+    x = x + cim_linear(attn.reshape(b, s, nh * hd), p["wo"], cfg, seed=4,
+                       packed=p.get("wo_cim"))
 
     if memory is not None:                       # cross-attention (enc-dec)
         x = x + _cross_attn(p, x, memory, cfg)
@@ -410,7 +432,9 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
         else:
             y = moe_mod.moe_ffn(p, h2, cfg)      # dense/MoE can interleave
     else:
-        y = mlp(h2, p["w_i"], p["w_g"], p["w_o"], cfg, seed=5)
+        y = mlp(h2, p["w_i"], p["w_g"], p["w_o"], cfg, seed=5,
+                packed=(p.get("w_i_cim"), p.get("w_g_cim"),
+                        p.get("w_o_cim")))
     return x + y, new_cache
 
 

@@ -1,0 +1,112 @@
+"""Offline stand-in for the slice of the `hypothesis` API these tests use.
+
+The test container has no network and no `hypothesis` wheel, which used to
+break *collection* of test_core / test_kernels / test_mapping. This shim
+implements deterministic example sampling for the constructs actually used
+here — `@settings(max_examples=, deadline=)`, `@given(**kwargs)` and
+`strategies.integers(lo, hi)` — so the same property tests run everywhere.
+
+Sampling is seeded from the test's qualified name: a given test always sees
+the same example sequence (reproducible CI), endpoints are always included
+(hypothesis-style boundary bias), and the failing example is printed before
+the original exception propagates.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:            # offline container
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, Dict, List
+
+
+class Strategy:
+    """A deterministic example source: draw(rng) -> value, plus a list of
+    boundary examples that are always tried first."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundary: List[Any]):
+        self.draw = draw
+        self.boundary = boundary
+
+
+class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value),
+                        [min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> Strategy:
+        return Strategy(lambda rng: rng.uniform(min_value, max_value),
+                        [min_value, max_value])
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.getrandbits(1)), [False, True])
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: rng.choice(elements), elements[:1])
+
+
+st = strategies
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (possibly already @given-wrapped) test."""
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats: Strategy):
+    """Run the test over a deterministic sweep of drawn examples.
+
+    Boundary values of each strategy are combined pairwise first (one
+    strategy at its bound, the others at their first bound), then the
+    remaining budget is filled with seeded-random draws.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples", None) \
+                or getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            examples: List[Dict[str, Any]] = []
+            names = list(strats)
+            # boundary sweep: each argument at each of its bounds
+            for name in names:
+                for b in strats[name].boundary:
+                    ex = {k: strats[k].boundary[0] for k in names}
+                    ex[name] = b
+                    if ex not in examples:
+                        examples.append(ex)
+            while len(examples) < n:
+                examples.append({k: s.draw(rng) for k, s in strats.items()})
+            for ex in examples[:max(n, 1)]:
+                try:
+                    fn(*args, **ex, **kwargs)
+                except Exception:
+                    print(f"Falsifying example ({fn.__qualname__}): {ex}")
+                    raise
+
+        # pytest must not see the drawn parameters as fixtures: expose the
+        # original signature minus the @given kwargs (what hypothesis does)
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in
+                  strats]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

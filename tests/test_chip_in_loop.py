@@ -13,8 +13,11 @@ from repro.models import cnn7
 from repro.train.noisy import train, accuracy
 from repro.train.chip_in_loop import progressive_finetune
 
+# multi-minute chip-in-the-loop physics: fast tier skips (tools/ci.sh)
+pytestmark = pytest.mark.slow
 
-@pytest.fixture(scope="module")
+
+@pytest.fixture(scope="session")
 def setup():
     key = jax.random.PRNGKey(0)
     x, y = cluster_images(key, 256, hw=12)

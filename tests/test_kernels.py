@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.types import CIMConfig, NonIdealityConfig
 from repro.core.conductance import weights_to_conductances

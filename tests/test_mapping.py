@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.mapping import (MatrixReq, plan_layers, multicore_mvm,
                                 interleave_assignment, Tile)
@@ -69,6 +72,33 @@ def test_multicore_mvm_exact(r, c, seed):
                       lambda xt, wt, t: xt @ wt)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=2e-4,
                                atol=1e-3)
+
+
+def test_duplication_respects_core_budget():
+    """Regression: replica tiles must never be assigned past the core
+    budget, including when a layer's tile count exceeds the spare cores
+    (copies are computed before the per-tile spare bookkeeping)."""
+    cases = [
+        # len(base) > spare: 10 base tiles each, 2 layers on 24 cores
+        ([MatrixReq("a", 600, 500, intensity=50.0),
+          MatrixReq("b", 600, 500, intensity=40.0)], CoreSpec(n_cores=24)),
+        # huge intensity wants more copies than fit
+        ([MatrixReq("hot", 100, 100, intensity=1000.0),
+          MatrixReq("c", 50, 50)], CoreSpec(n_cores=8)),
+        # several hot layers competing for the same spares
+        ([MatrixReq(f"h{i}", 120, 90, intensity=16.0) for i in range(4)],
+         CoreSpec(n_cores=12)),
+    ]
+    for reqs, spec in cases:
+        plan = plan_layers(reqs, spec)
+        assert plan.n_cores_used <= spec.n_cores
+        assert max(t.core for t in plan.tiles) < spec.n_cores
+        assert min(t.core for t in plan.tiles) >= 0
+        # no two tiles share a (core, seq_slot) cell
+        seen = set()
+        for t in plan.tiles:
+            assert (t.core, t.seq_slot) not in seen
+            seen.add((t.core, t.seq_slot))
 
 
 def test_interleave_equalizes_core_load():

@@ -15,7 +15,7 @@ from repro.models import cnn7, resnet20, lstm, nn
 from repro.train.noisy import train, accuracy, eval_under_noise
 
 
-@pytest.fixture(scope="module")
+@pytest.fixture(scope="session")
 def cnn_setup():
     key = jax.random.PRNGKey(0)
     x, y = cluster_images(key, 448, hw=16)
@@ -26,6 +26,7 @@ def cnn_setup():
     return params, (x, y), (xt, yt)
 
 
+@pytest.mark.slow
 def test_cnn7_learns_and_is_noise_resilient(cnn_setup):
     params, (x, y), (xt, yt) = cnn_setup
     acc = float(accuracy(cnn7.apply(params, xt), yt))
@@ -35,6 +36,7 @@ def test_cnn7_learns_and_is_noise_resilient(cnn_setup):
     assert sweep[0.1] > 0.55          # paper Fig. 3e structure
 
 
+@pytest.mark.slow
 def test_cnn7_chip_accuracy_close_to_software(cnn_setup):
     params, (x, y), (xt, yt) = cnn_setup
     cfg = CIMConfig(in_bits=4, out_bits=8)
@@ -78,6 +80,7 @@ def test_resnet20_has_61_conductance_matrices():
     assert sum(1 for n in names if "proj" in n) == 2
 
 
+@pytest.mark.slow
 def test_lstm_learns_keywords():
     key = jax.random.PRNGKey(0)
     x, y = keyword_mfcc(key, 256, t=20, f=10, classes=4)

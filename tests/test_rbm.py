@@ -11,8 +11,11 @@ from repro.models import rbm
 
 N_VIS, N_HID, PIX = 138, 32, 128     # reduced geometry (128 pix + 10 labels)
 
+# CD-trains an RBM for 800 steps: fast tier skips (tools/ci.sh)
+pytestmark = pytest.mark.slow
 
-@pytest.fixture(scope="module")
+
+@pytest.fixture(scope="session")
 def trained_rbm():
     key = jax.random.PRNGKey(0)
     v = binary_patterns(key, 512, d=PIX, rank=4)

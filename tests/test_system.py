@@ -8,6 +8,11 @@ import numpy as np
 import repro.core as core
 from repro.core.types import CIMConfig
 
+import pytest
+
+# full write-verify + train/serve drivers: fast tier skips (tools/ci.sh)
+pytestmark = pytest.mark.slow
+
 
 def test_end_to_end_cim_pipeline():
     """Train-free end-to-end: program a matrix with full write-verify, run
@@ -46,3 +51,19 @@ def test_serve_driver_smoke():
     out = main(["--arch", "codeqwen1.5-7b", "--smoke", "--batch", "2",
                 "--prompt-len", "8", "--gen", "4"])
     assert out.shape == (2, 4)
+
+
+def test_serve_driver_cim_packed():
+    """--cim serves every dense-block projection through the packed CIM
+    engine: programs + packs the chip once, then prefill/decode run with
+    one Pallas dispatch per projection (no per-tile retracing)."""
+    from repro.launch.serve import main
+    from repro.kernels.cim_mvm.kernel import TRACE_COUNTS
+    before = TRACE_COUNTS["cim_mvm_packed"]
+    out = main(["--arch", "gemma2-9b", "--smoke", "--cim", "--batch", "2",
+                "--prompt-len", "8", "--gen", "4"])
+    assert out.shape == (2, 4)
+    assert np.asarray(out).min() >= 0
+    # a handful of traces (prefill + decode shapes x projection shapes),
+    # NOT per tile per token: 7 projections x 2 shapes is the ceiling
+    assert TRACE_COUNTS["cim_mvm_packed"] - before <= 14

@@ -27,6 +27,7 @@ def _batch(cfg, b=2, s=16, key=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", configs.ARCH_NAMES)
 def test_arch_smoke_forward_and_train_step(arch):
     """One forward + one train step on the reduced config, CPU."""
@@ -48,6 +49,7 @@ def test_arch_smoke_forward_and_train_step(arch):
     assert max(jax.tree_util.tree_leaves(d)) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2-72b", "gemma2-9b", "granite-20b",
                                   "rwkv6-7b", "zamba2-7b",
                                   "deepseek-moe-16b",
@@ -75,6 +77,7 @@ def test_dense_decode_parity():
     np.testing.assert_allclose(np.asarray(lg), np.asarray(full), atol=2e-4)
 
 
+@pytest.mark.slow
 def test_rwkv_chunked_vs_decode_parity():
     cfg = configs.get("rwkv6-7b", smoke=True).replace(dtype=jnp.float32)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
@@ -90,6 +93,7 @@ def test_rwkv_chunked_vs_decode_parity():
     assert rel < 1e-3
 
 
+@pytest.mark.slow
 def test_mamba_chunked_vs_decode_parity():
     cfg = configs.get("zamba2-7b", smoke=True).replace(dtype=jnp.float32)
     params = T.init_params(jax.random.PRNGKey(0), cfg)

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI tiers for the NeuRRAM reproduction.
+#
+#   tools/ci.sh            fast tier: pytest -m "not slow"  (< ~2 min)
+#   tools/ci.sh full       tier-1:    the whole suite, slow tests included
+#
+# The fast tier is the pre-commit loop: kernels, planner/packing, engine,
+# models, distributed. The slow tier adds the pulse-level write-verify
+# simulator, chip-in-the-loop fine-tuning and the end-to-end train/serve
+# drivers (several minutes of simulated physics).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+tier="${1:-fast}"
+case "$tier" in
+  fast) exec python -m pytest -q -m "not slow" ;;
+  full) exec python -m pytest -x -q ;;
+  *) echo "usage: tools/ci.sh [fast|full]" >&2; exit 2 ;;
+esac
