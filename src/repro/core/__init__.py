@@ -1,9 +1,11 @@
 """repro.core — NeuRRAM behavioral model (the paper's contribution in JAX)."""
 from .types import (CIMConfig, DeviceConfig, NonIdealityConfig, CoreSpec,
                     EnergyConfig)  # noqa: F401
-from .cim import (CIMLayer, CIMEngine, PackedCIMLayer, pack_cim_layer,
-                  packed_forward, calibrate_tile_v_decr, program, forward,
-                  effective_weight)  # noqa: F401
+from .cim import (CIMLayer, CIMEngine, CompiledChip, PackedCIMLayer,
+                  pack_cim_layer, packed_forward, calibrate_tile_v_decr,
+                  program, forward, effective_weight, compile_chip,
+                  plan_chip, schedule_chip, program_chip, calibrate_chip,
+                  pack_chip)  # noqa: F401
 from .conductance import (Conductances, weights_to_conductances,
                           program_conductances,
                           conductances_to_weights)  # noqa: F401
@@ -11,7 +13,8 @@ from .quant import pact_quantize, quantize_to_int, dequantize  # noqa: F401
 from .noise import weight_noise, relaxation_sigma, apply_relaxation  # noqa: F401
 from .writeverify import write_verify, iterative_program  # noqa: F401
 from .calibration import calibrate_layer, calibrate_v_decr  # noqa: F401
-from .mapping import (MatrixReq, Tile, Plan, PackedPlan, plan_layers,
-                      pack_tiles, multicore_mvm, multicore_mvm_packed,
+from .mapping import (MatrixReq, Tile, Plan, PackedPlan, TileSchedule,
+                      plan_layers, pack_tiles, schedule_tiles,
+                      ir_drop_max_cols, multicore_mvm, multicore_mvm_packed,
                       interleave_assignment)  # noqa: F401
 from .energy import mvm_cost, neurram_edp, PRIOR_ART_EDP, MVMCost  # noqa: F401

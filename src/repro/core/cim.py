@@ -1,31 +1,43 @@
-"""High-level CIM API — what models program onto the (simulated) chip.
+"""High-level CIM API — the chip-compiler pipeline models deploy through.
 
-Three execution modes mirror the paper's experimental conditions:
+Chip deployment is an explicit five-stage compiler —
 
-  * 'ideal'       — conductances encode weights exactly (no programming noise);
-                    still quantized input + voltage-mode ADC. Software-ish.
-  * 'relaxed'     — + conductance relaxation noise (Gaussian, state-dependent
-                    sigma, 3 programming iterations). The standard chip-sim.
-  * 'writeverify' — conductances produced by the full pulse-level write-verify
-                    + iterative-relaxation simulator. Most faithful; slow.
+    plan  ->  schedule  ->  program  ->  calibrate  ->  pack
 
-Two serving surfaces:
+— where every stage is a standalone, testable function producing a typed
+artifact (see DESIGN.md 'Chip-compiler pipeline'):
 
-  * `CIMEngine` — the production path. Programs + calibrates a set of weight
-    matrices once, packs each layer's TNSA tile plan (core/mapping) into
-    padded stacked tensors, and serves batched `forward` requests through a
-    SINGLE jit'd packed Pallas dispatch per layer (one trace per plan
-    shape; row-split partial sums accumulate digitally inside the kernel).
-  * `program` / `forward` — thin single-matrix wrappers kept for the
-    per-layer demos and tests: one full-matrix fused kernel (or the
-    bit-serial oracle when per-phase non-idealities are enabled), returning
-    the de-normalized digital output in x @ W units with measured ADC
-    offsets cancelled — exactly the chip's digital post-processing.
+  * `plan_chip`       (mapping.plan_layers): matrices -> `Plan` of core tiles
+                      (split / duplicate / merge, plus IR-drop-bounded
+                      vertical splits via `mapping.ir_drop_max_cols`).
+  * `schedule_chip`   (mapping.schedule_tiles): `Plan` -> per-layer
+                      `TileSchedule` serializing same-core seq_slot tiles
+                      into ordered passes (merged cores are time-shared).
+  * `program_chip`    : weights -> `CIMLayer` conductances per matrix, at one
+                      of three fidelities mirroring the paper's conditions —
+                      'ideal' (exact encode), 'relaxed' (+relaxation noise,
+                      3 iterations), 'writeverify' (full pulse-level sim).
+  * `calibrate_chip`  : per-core ADC operating points — one v_decr per tile,
+                      measured on that tile's own partial-sum distribution.
+  * `pack_chip`       (mapping.pack_tiles): everything above folded into
+                      per-layer `PackedCIMLayer` single-dispatch tensors.
+
+`compile_chip` composes the five stages into a `CompiledChip` pytree — THE
+serving artifact: `CIMEngine` wraps one for interactive use, and
+`models/nn.deploy_packed_stack` stacks the layers of one across a scanned
+transformer stack (one chip per transformer layer, one engine per TP shard).
+
+`program` / `forward` remain as thin single-matrix wrappers for the
+per-layer demos and tests: one full-matrix fused kernel (or the bit-serial
+oracle when per-phase non-idealities are enabled), returning the
+de-normalized digital output in x @ W units with measured ADC offsets
+cancelled — exactly the chip's digital post-processing.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, NamedTuple, Optional, Sequence, Union
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +47,9 @@ from .quant import quantize_to_int
 from .conductance import weights_to_conductances, program_conductances
 from .calibration import calibrate_layer, calibrate_v_decr, LayerCalibration
 from .writeverify import iterative_program
-from .mapping import MatrixReq, Plan, PackedPlan, pack_tiles, plan_layers
+from .mapping import (MatrixReq, Plan, PackedPlan, TileSchedule,
+                      ir_drop_max_cols, pack_tiles, plan_layers,
+                      schedule_tiles)
 from ..kernels.cim_mvm.ops import cim_mvm, cim_mvm_packed
 from ..kernels.cim_mvm.ref import cim_mvm_ref, dequantize_output
 
@@ -112,6 +126,21 @@ def _needs_ref(cfg: CIMConfig) -> bool:
             or cfg.activation == "stochastic")
 
 
+def _oracle_only(cfg: CIMConfig) -> bool:
+    """Non-idealities the packed serving path cannot honor at all.
+
+    IR drop is deliberately NOT in this list: the planner MITIGATES it by
+    bounding columns per core (`mapping.ir_drop_max_cols`), after which the
+    residual droop is below the per-core ADC calibration tolerance — the
+    paper's reason for splitting wide matrices vertically. The remaining
+    per-phase effects (crossbar wire IR, coupling, ADC offset spread) and
+    the stochastic-neuron mode still need the bit-serial oracle.
+    """
+    ni = cfg.nonideal
+    return (ni.wire_r_alpha > 0 or ni.coupling_sigma > 0
+            or ni.adc_offset_sigma > 0 or cfg.activation == "stochastic")
+
+
 def effective_weight(layer: CIMLayer, cfg: CIMConfig):
     """The weight the (noisy) array actually realizes."""
     return (layer.g_pos - layer.g_neg) * layer.w_max / cfg.device.g_max
@@ -152,8 +181,8 @@ def calibrate_tile_v_decr(layer: CIMLayer, tiles, x_cal, cfg: CIMConfig,
     return jnp.stack(vds)
 
 
-def pack_cim_layer(layer: CIMLayer, tiles, cfg: CIMConfig,
-                   v_decr=None) -> PackedCIMLayer:
+def pack_cim_layer(layer: CIMLayer, tiles, cfg: CIMConfig, v_decr=None,
+                   schedule: Optional[TileSchedule] = None) -> PackedCIMLayer:
     """Pack a programmed CIMLayer's tiles for single-dispatch execution.
 
     Per-tile voltage-mode normalizers are computed from the tile's own rows
@@ -165,12 +194,14 @@ def pack_cim_layer(layer: CIMLayer, tiles, cfg: CIMConfig,
     v_decr: per-tile (T,) steps from calibrate_tile_v_decr; defaults to the
     layer's whole-matrix step (exact for single-tile plans, a systematic
     ADC range mismatch for split plans — prefer per-tile).
+    schedule: optional `mapping.TileSchedule` over the same tiles (pass-major
+    seq-slot serialization); None packs the single-pass tile-grid layout.
     """
     fold = cfg.activation not in ("tanh", "sigmoid", "stochastic")
     packed = pack_tiles(tiles, layer.g_pos - layer.g_neg,
                         gsum=layer.g_pos + layer.g_neg,
                         v_decr=layer.v_decr if v_decr is None else v_decr,
-                        fold_norm=fold)
+                        fold_norm=fold, schedule=schedule)
     return PackedCIMLayer(layer, packed)
 
 
@@ -192,28 +223,158 @@ def packed_forward(pcl: PackedCIMLayer, x, cfg: CIMConfig, *, seed=0,
     return acc * layer.w_max * scale / (cfg.v_read * cfg.device.g_max)
 
 
+# ------------------------------------------------- chip-compiler pipeline
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(eq=False)
+class CompiledChip:
+    """The chip-compiler's output artifact: every stage's result, servable.
+
+    Pytree: the packed per-layer tensors (`layers`) are children — so a
+    CompiledChip can ride through jit/tree_map — while the config and the
+    intermediate plan/schedule artifacts are (identity-hashed) aux data
+    kept for introspection, tests and re-planning.
+    """
+    cfg: CIMConfig
+    spec: CoreSpec
+    mode: str
+    plan: Plan
+    schedules: Dict[str, TileSchedule]
+    layers: Dict[str, PackedCIMLayer]
+
+    def tree_flatten(self):
+        return (self.layers,), (self.cfg, self.spec, self.mode, self.plan,
+                                self.schedules)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*aux, layers=children[0])
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.layers
+
+
+def plan_chip(reqs: Sequence[MatrixReq], cfg: CIMConfig,
+              spec: CoreSpec = CoreSpec()) -> Plan:
+    """Stage 1 (PLAN): allocate all matrices onto the chip's cores together
+    (split / duplicate / merge, paper Fig. 2a), bounding tile width by the
+    IR-drop constraint when `cfg.nonideal.ir_drop_alpha` > 0."""
+    return plan_layers(reqs, spec,
+                       max_cols_per_core=ir_drop_max_cols(cfg, spec))
+
+
+def schedule_chip(plan: Plan, names: Sequence[str]
+                  ) -> Dict[str, TileSchedule]:
+    """Stage 2 (SCHEDULE): serialize each layer's same-core seq_slot tiles
+    into ordered passes (merged cores are time-shared; distinct cores
+    overlap within a pass)."""
+    return {n: schedule_tiles(plan.tiles_for(n)) for n in names}
+
+
+def program_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig, *,
+                 mode: str = "relaxed",
+                 in_alpha: Union[float, Dict[str, float]] = 1.0,
+                 x_cal: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[Dict[str, CIMLayer], Dict[str, jax.Array]]:
+    """Stage 3 (PROGRAM): write every weight matrix into (simulated) RRAM
+    conductances at the requested fidelity and run the whole-matrix
+    calibration. Returns (name -> CIMLayer, name -> calibration batch) — the
+    same batch must drive stage 4 so both calibrations see one activation
+    distribution (paper: training-set data, Extended Data Fig. 5)."""
+    layers: Dict[str, CIMLayer] = {}
+    batches: Dict[str, jax.Array] = {}
+    for i, name in enumerate(sorted(weights)):
+        alpha = (in_alpha.get(name, 1.0)
+                 if isinstance(in_alpha, dict) else in_alpha)
+        k_layer, k_syn = jax.random.split(jax.random.fold_in(key, i))
+        xc = x_cal.get(name) if x_cal is not None else None
+        if xc is None:
+            xc = alpha * jax.random.truncated_normal(
+                k_syn, -2.0, 2.0, (64, weights[name].shape[0]))
+        layers[name] = program(k_layer, weights[name], cfg,
+                               in_alpha=alpha, x_cal=xc, mode=mode)
+        batches[name] = xc
+    return layers, batches
+
+
+def calibrate_chip(layers: Dict[str, CIMLayer], plan: Plan,
+                   batches: Dict[str, jax.Array], cfg: CIMConfig
+                   ) -> Dict[str, jax.Array]:
+    """Stage 4 (CALIBRATE): per-core ADC operating points — one v_decr per
+    tile, covering that tile's own partial-sum distribution (the chip
+    calibrates each core separately)."""
+    return {n: calibrate_tile_v_decr(layers[n], plan.tiles_for(n),
+                                     batches[n], cfg) for n in layers}
+
+
+def pack_chip(layers: Dict[str, CIMLayer], plan: Plan,
+              schedules: Dict[str, TileSchedule], cfg: CIMConfig,
+              v_decrs: Dict[str, jax.Array]) -> Dict[str, PackedCIMLayer]:
+    """Stage 5 (PACK): fold conductances, normalizers and per-core ADC steps
+    into each layer's scheduled single-dispatch tensors."""
+    return {n: pack_cim_layer(layers[n], plan.tiles_for(n), cfg,
+                              v_decr=v_decrs[n], schedule=schedules[n])
+            for n in layers}
+
+
+def compile_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig,
+                 spec: CoreSpec = CoreSpec(), mode: str = "relaxed", *,
+                 reqs: Optional[Sequence[MatrixReq]] = None,
+                 in_alpha: Union[float, Dict[str, float]] = 1.0,
+                 x_cal: Optional[Dict[str, jax.Array]] = None
+                 ) -> CompiledChip:
+    """Run the full pipeline: plan -> schedule -> program -> calibrate ->
+    pack one chip's worth of weight matrices into a servable CompiledChip.
+
+    weights: name -> (R, C) float weight matrix.
+    reqs: optional MatrixReqs (intensities steer duplication); defaults to
+    one plain req per weight. in_alpha: PACT clip, scalar or per-name.
+    x_cal: optional per-name (B_cal, R) calibration activations.
+    """
+    if _oracle_only(cfg):
+        raise ValueError(
+            "compile_chip serves the fused kernel path only; per-phase "
+            "non-idealities require the bit-serial oracle (core.forward)")
+    reqs = list(reqs) if reqs is not None else [
+        MatrixReq(n, int(w.shape[0]), int(w.shape[1]))
+        for n, w in weights.items()]
+    if {r.name for r in reqs} != set(weights):
+        raise ValueError("reqs names must match weights names")
+    plan = plan_chip(reqs, cfg, spec)
+    schedules = schedule_chip(plan, sorted(weights))
+    layers, batches = program_chip(key, weights, cfg, mode=mode,
+                                   in_alpha=in_alpha, x_cal=x_cal)
+    v_decrs = calibrate_chip(layers, plan, batches, cfg)
+    packed = pack_chip(layers, plan, schedules, cfg, v_decrs)
+    return CompiledChip(cfg=cfg, spec=spec, mode=mode, plan=plan,
+                        schedules=schedules, layers=packed)
+
+
 class CIMEngine:
-    """Programs + calibrates + packs a set of weight matrices once, then
-    serves batched forward requests through one jit'd dispatch per layer.
+    """Serves a CompiledChip: compile once, then batched forward requests run
+    through one jit'd dispatch per layer.
 
     Usage:
         eng = CIMEngine(cfg, mode="relaxed")
-        eng.program(key, {"fc1": w1, "fc2": w2})      # plan + program + pack
+        eng.program(key, {"fc1": w1, "fc2": w2})      # the 5-stage pipeline
         y = eng.forward("fc1", x)                     # single pallas_call
 
-    The planner allocates all matrices onto the chip's cores together
-    (split / duplicate / merge, paper Fig. 2a); each layer then executes as
-    ONE packed Pallas dispatch — a single jit trace per plan shape, so the
+    The compiler allocates all matrices onto the chip's cores together
+    (split / duplicate / merge / IR-drop splits, paper Fig. 2a) and
+    serializes merged cores into passes; each layer then executes as ONE
+    packed Pallas dispatch — a single jit trace per plan shape, so the
     engine drops into a serving loop without per-tile retracing.
 
-    Per-phase non-idealities (IR drop, coupling, ADC offset spread) need the
-    bit-serial oracle and are not servable from the packed path; program()
-    raises for such configs — use the per-layer `forward` demo path instead.
+    Per-phase non-idealities other than IR drop (crossbar wire IR, coupling,
+    ADC offset spread) need the bit-serial oracle and are not servable from
+    the packed path; such configs raise — use the per-layer `forward` demo
+    path instead. IR drop IS servable: the planner bounds columns per core
+    so the droop stays within calibration tolerance.
     """
 
     def __init__(self, cfg: CIMConfig, spec: CoreSpec = CoreSpec(),
                  mode: str = "relaxed", interpret: Optional[bool] = None):
-        if _needs_ref(cfg):
+        if _oracle_only(cfg):
             raise ValueError(
                 "CIMEngine serves the fused kernel path only; per-phase "
                 "non-idealities require the bit-serial oracle (core.forward)")
@@ -221,49 +382,31 @@ class CIMEngine:
         self.spec = spec
         self.mode = mode
         self.interpret = interpret
-        self.plan: Optional[Plan] = None
-        self.layers: Dict[str, PackedCIMLayer] = {}
+        self.chip: Optional[CompiledChip] = None
         # seed is a traced SMEM input, so per-call seeds never retrace
         # (stochastic activation itself is oracle-only, rejected above —
         # direct packed_forward users can still thread seeds)
         self._dispatch = jax.jit(
             functools.partial(packed_forward, cfg=cfg, interpret=interpret))
 
+    @property
+    def plan(self) -> Optional[Plan]:
+        return self.chip.plan if self.chip is not None else None
+
+    @property
+    def layers(self) -> Dict[str, PackedCIMLayer]:
+        return self.chip.layers if self.chip is not None else {}
+
     def program(self, key, weights: Dict[str, jax.Array], *,
                 reqs: Optional[Sequence[MatrixReq]] = None,
                 in_alpha: Union[float, Dict[str, float]] = 1.0,
                 x_cal: Optional[Dict[str, jax.Array]] = None) -> Plan:
-        """Plan all matrices onto the chip, program + calibrate + pack each.
-
-        weights: name -> (R, C) float weight matrix.
-        reqs: optional MatrixReqs (intensities steer duplication); defaults
-        to one plain req per weight. in_alpha: PACT clip, scalar or per-name.
-        x_cal: optional per-name (B_cal, R) calibration activations.
-        """
-        reqs = list(reqs) if reqs is not None else [
-            MatrixReq(n, int(w.shape[0]), int(w.shape[1]))
-            for n, w in weights.items()]
-        if {r.name for r in reqs} != set(weights):
-            raise ValueError("reqs names must match weights names")
-        self.layers = {}          # re-programming discards the old chip state
-        self.plan = plan_layers(reqs, self.spec)
-        for i, name in enumerate(sorted(weights)):
-            alpha = (in_alpha.get(name, 1.0)
-                     if isinstance(in_alpha, dict) else in_alpha)
-            k_layer, k_syn = jax.random.split(jax.random.fold_in(key, i))
-            # one calibration batch per layer, shared by the whole-matrix
-            # calibration (program) and the per-core ADC calibration below
-            xc = x_cal.get(name) if x_cal is not None else None
-            if xc is None:
-                xc = alpha * jax.random.truncated_normal(
-                    k_syn, -2.0, 2.0, (64, weights[name].shape[0]))
-            layer = program(k_layer, weights[name], self.cfg,
-                            in_alpha=alpha, x_cal=xc, mode=self.mode)
-            tiles = self.plan.tiles_for(name)
-            vd = calibrate_tile_v_decr(layer, tiles, xc, self.cfg)
-            self.layers[name] = pack_cim_layer(layer, tiles, self.cfg,
-                                               v_decr=vd)
-        return self.plan
+        """Compile `weights` into a fresh CompiledChip (re-programming
+        discards the old chip state). See `compile_chip`."""
+        self.chip = compile_chip(key, weights, self.cfg, self.spec,
+                                 self.mode, reqs=reqs, in_alpha=in_alpha,
+                                 x_cal=x_cal)
+        return self.chip.plan
 
     def forward(self, name: str, x, *, seed: int = 0):
         """y ~= x @ W_name via the packed dispatch (one pallas_call)."""

@@ -1,37 +1,51 @@
-"""TNSA multi-core weight mapping: planner, tile PACKING, and executors
-(paper Fig. 2a + Methods 'Weight mapping strategy onto multiple CIM cores').
+"""TNSA multi-core weight mapping — the PLAN, SCHEDULE and PACK stages of the
+chip-compiler pipeline (paper Fig. 2a + Methods 'Weight mapping strategy onto
+multiple CIM cores'; see DESIGN.md 'Chip-compiler pipeline').
 
 A NeuRRAM chip has 48 cores of 256x256 cells; a weight matrix is first turned
 into a conductance matrix (differential rows double the height: 2R x C, plus
-bias rows), then:
+bias rows), then the deployment stack runs an explicit compiler pipeline —
+``plan -> schedule -> program -> calibrate -> pack`` — whose first, second
+and fifth stages live here:
 
-  * matrices larger than a core are SPLIT into <=256x256 tiles;
-  * computationally intensive matrices are DUPLICATED across spare cores
-    (data parallelism);
-  * small matrices are MERGED diagonally (parallel access);
-  * large matrices sharing rows are merged horizontally (sequential access);
-  * wide matrices may be split vertically across cores to limit IR drop.
+  * `plan_layers` (stage 1, PLAN): the paper's allocation policy —
+    matrices larger than a core are SPLIT into <=256x256 tiles; hot
+    matrices are DUPLICATED across spare cores (data parallelism); small
+    matrices are MERGED diagonally (parallel access) or horizontally
+    (sequential access, `seq_slot` > 0); and wide matrices are SPLIT
+    VERTICALLY to bound IR drop — `ir_drop_max_cols` derives the
+    `max_cols_per_core` constraint from `NonIdealityConfig.ir_drop_alpha`.
+  * `schedule_tiles` (stage 2, SCHEDULE): serializes same-core `seq_slot`
+    tiles into ordered PASSES — the chip time-shares a merged core, so its
+    occupants cannot fire together — while tiles on different cores overlap
+    within a pass. The result is a pass-major execution order (+ idle-slot
+    padding) the packed kernel consumes as a pass grid dimension.
+  * `pack_tiles` (stage 5, PACK): the (scheduled) tile plan as DATA, not
+    control flow. All tiles of a layer are gathered into padded stacked
+    tensors (`gd_tiles (T, bk, bn)`, `inv_norm_tiles (T, 1, bn)`,
+    `v_decr_tiles (T,)`, `denorm_tiles (T, 1, bn)`) plus static
+    `row_block/col_block/first_visit` index tuples, and the whole layer
+    executes as ONE Pallas dispatch (`kernels/cim_mvm`) with row-split
+    partial sums accumulated digitally via output-block index maps.
 
-`plan_layers` reproduces these allocation decisions. Execution comes in two
-forms:
+Stages 3 and 4 (PROGRAM, CALIBRATE) live in `core.cim`, which composes all
+five into `compile_chip` -> `CompiledChip`, the artifact `CIMEngine` and
+`models/nn.deploy_packed_stack` serve from.
+
+Execution comes in two forms:
 
   * `multicore_mvm` — the legacy per-tile Python loop (one `dynamic_slice`
     matmul per tile). Kept as the readable reference executor; it retraces
     per tile shape and cannot be folded into a serving-path jit cheaply.
-  * `pack_tiles` + `multicore_mvm_packed` — the tile plan as DATA, not
-    control flow. All tiles of a layer are gathered into padded stacked
-    tensors (`gd_tiles (T, bk, bn)`, `inv_norm_tiles (T, 1, bn)`,
-    `v_decr_tiles (T,)`, `denorm_tiles (T, 1, bn)`) plus static
-    `row_block/col_block/seq_slot` index tuples, and the whole layer
-    executes as ONE Pallas dispatch (`kernels/cim_mvm`) with row-split
-    partial sums accumulated digitally via output-block index maps. This is
-    what `core.cim.CIMEngine` serves from.
+  * `multicore_mvm_packed` — a packed plan through the single-dispatch
+    Pallas executor: unscheduled single-pass plans take the tile-grid
+    kernel, scheduled multi-pass plans the pass-major grid kernel.
 
-A `PackedPlan` is a pytree whose geometry (tile index maps, block sizes) is
-static aux data: packed plans of a scanned layer stack can be stacked with
-`tree_map(jnp.stack, ...)` and sliced inside `lax.scan` without retracing.
-At datacenter scale the planner operates per TP shard (a 'core' is the
-intra-shard unit; see distributed/sharding.shard_shape).
+A `PackedPlan` is a pytree whose geometry (tile index maps, block sizes,
+pass structure) is static aux data: packed plans of a scanned layer stack
+can be stacked with `tree_map(jnp.stack, ...)` and sliced inside `lax.scan`
+without retracing. At datacenter scale the planner operates per TP shard (a
+'core' is the intra-shard unit; see distributed/sharding.shard_shape).
 """
 from __future__ import annotations
 
@@ -42,7 +56,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .types import CoreSpec
+from .types import CIMConfig, CoreSpec
 
 
 @dataclasses.dataclass
@@ -65,7 +79,7 @@ class MatrixReq:
     intensity: float = 1.0  # compute per weight (MACs/weight) — duplication prio
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)      # identity hash: Plan rides pytree aux
 class Plan:
     tiles: List[Tile]
     n_cores_used: int
@@ -76,11 +90,42 @@ class Plan:
         return [t for t in self.tiles if t.layer == name and t.replica == 0]
 
 
+def ir_drop_max_cols(cfg: CIMConfig, spec: CoreSpec = CoreSpec(),
+                     droop_tol: float = 0.05) -> Optional[int]:
+    """IR-drop planning constraint (paper Methods 'Weight mapping strategy':
+    wide matrices are split vertically across cores to limit IR drop).
+
+    Mirrors the oracle's droop model (kernels/cim_mvm/ref.py `settle`):
+    the driver droop per pulse phase is `ir_drop_alpha` (1/uS) times the
+    TOTAL current load — every active row wire sources its whole row of
+    differential pairs, so a core of R weight rows and C columns sees at
+    worst R * C * (g_max + g_min) of activated conductance. Cap the
+    columns per core so that worst-case droop alpha * R * C * (g_max +
+    g_min) stays under `droop_tol` (5% — within what per-core ADC
+    calibration absorbs; real input patterns drive fewer rows, so the
+    residual is smaller still). Returns None when ir_drop is off (no
+    constraint).
+    """
+    alpha = cfg.nonideal.ir_drop_alpha
+    if alpha <= 0:
+        return None
+    rows = spec.rows // 2                          # differential weight rows
+    g_pair = cfg.device.g_max + cfg.device.g_min   # worst-case G+ + G- /cell
+    return max(1, min(spec.cols, int(droop_tol / (alpha * rows * g_pair))))
+
+
 def plan_layers(reqs: Sequence[MatrixReq], spec: CoreSpec = CoreSpec(),
-                differential_rows: bool = True) -> Plan:
-    """Greedy reproduction of the paper's allocation policy."""
+                differential_rows: bool = True,
+                max_cols_per_core: Optional[int] = None) -> Plan:
+    """Stage 1 (PLAN): greedy reproduction of the paper's allocation policy.
+
+    max_cols_per_core: optional vertical-split constraint (IR drop) — tiles
+    never exceed this many columns; see `ir_drop_max_cols`.
+    """
     row_cap = spec.rows // 2 if differential_rows else spec.rows  # 128 weights
     col_cap = spec.cols
+    if max_cols_per_core is not None:
+        col_cap = max(1, min(col_cap, max_cols_per_core))
 
     # 1) split every matrix into tiles
     per_layer: List[List[Tile]] = []
@@ -175,6 +220,53 @@ def plan_layers(reqs: Sequence[MatrixReq], spec: CoreSpec = CoreSpec(),
                 merged=merged)
 
 
+# ------------------------------------------------------------- stage 2: schedule
+
+@dataclasses.dataclass(frozen=True)
+class TileSchedule:
+    """Stage 2 (SCHEDULE) artifact: one layer's tiles serialized into ordered
+    passes the way the chip time-shares merged cores (Fig. 2a sequential
+    access).
+
+    order: pass-major slot -> index into the layer's replica-0 tile list
+           (None = idle slot: the pass has fewer tiles than `pass_len`,
+           i.e. some cores sit out this pass).
+    n_passes: number of sequential passes (= number of distinct seq_slots).
+    pass_len: tiles (cores firing) per pass, after padding to the widest pass.
+    """
+    order: Tuple[Optional[int], ...]
+    n_passes: int
+    pass_len: int
+
+
+def schedule_tiles(tiles: Sequence[Tile]) -> TileSchedule:
+    """Serialize same-core `seq_slot` tiles into ordered passes.
+
+    Tiles sharing a core (seq_slot > 0 from the planner's sequential merge)
+    cannot fire together — the chip accesses a merged core's occupants
+    serially — but tiles on DIFFERENT cores overlap within a pass. Pass p
+    holds every tile whose (rank-normalized) seq_slot is p, sorted by output
+    then input block so row-split partial sums accumulate in the loop
+    executor's order; narrower passes are padded with idle slots.
+    """
+    tiles = [t for t in tiles if t.replica == 0]
+    if not tiles:
+        raise ValueError("schedule_tiles needs at least one tile")
+    slots = sorted({t.seq_slot for t in tiles})
+    rank = {s: i for i, s in enumerate(slots)}
+    passes: List[List[int]] = [[] for _ in slots]
+    for i, t in enumerate(tiles):
+        passes[rank[t.seq_slot]].append(i)
+    for p in passes:
+        p.sort(key=lambda i: (tiles[i].col0, tiles[i].row0))
+    pass_len = max(len(p) for p in passes)
+    order: List[Optional[int]] = []
+    for p in passes:
+        order += p + [None] * (pass_len - len(p))
+    return TileSchedule(order=tuple(order), n_passes=len(passes),
+                        pass_len=pass_len)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PackedPlan:
@@ -195,12 +287,17 @@ class PackedPlan:
                       chip's digital post-processing folded into the kernel).
 
     Static geometry (pytree aux — hashable, shared by all stacked layers):
-      row_block/col_block: tile index -> input/output block index, sorted so
-                      tiles of one output block are contiguous (the packed
-                      kernel initializes an output block on its first visit
-                      and accumulates on revisits).
-      seq_slot:       per-tile sequential-access slot from the planner
-                      (future seq-slot-aware scheduling; unused by the math).
+      row_block/col_block: slot index -> input/output block index. Unscheduled
+                      plans are sorted so tiles of one output block are
+                      contiguous; scheduled plans are PASS-MAJOR (pass p's
+                      tiles occupy slots [p*pass_len, (p+1)*pass_len)) with
+                      idle slots pointing at block 0.
+      seq_slot:       per-slot pass index (0 for unscheduled plans).
+      first_visit:    1 where a slot is the first in execution order to touch
+                      its output block (the kernel zero-initializes there and
+                      accumulates everywhere else); 0 on idle padding.
+      n_passes:       pass count; > 1 routes execution to the pass-major
+                      scheduled kernel (kernels/cim_mvm).
     """
     layer: str
     bk: int
@@ -210,6 +307,8 @@ class PackedPlan:
     row_block: Tuple[int, ...]
     col_block: Tuple[int, ...]
     seq_slot: Tuple[int, ...]
+    first_visit: Tuple[int, ...]
+    n_passes: int
     gd_tiles: jax.Array
     inv_norm_tiles: jax.Array
     v_decr_tiles: jax.Array
@@ -218,6 +317,10 @@ class PackedPlan:
     @property
     def n_tiles(self) -> int:
         return len(self.row_block)
+
+    @property
+    def pass_len(self) -> int:
+        return self.n_tiles // self.n_passes
 
     @property
     def n_row_blocks(self) -> int:
@@ -231,7 +334,8 @@ class PackedPlan:
         children = (self.gd_tiles, self.inv_norm_tiles, self.v_decr_tiles,
                     self.denorm_tiles)
         aux = (self.layer, self.bk, self.bn, self.n_rows, self.n_cols,
-               self.row_block, self.col_block, self.seq_slot)
+               self.row_block, self.col_block, self.seq_slot,
+               self.first_visit, self.n_passes)
         return children, aux
 
     @classmethod
@@ -240,8 +344,9 @@ class PackedPlan:
 
 
 def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
-               fold_norm: bool = False) -> PackedPlan:
-    """Gather one layer's tiles into a PackedPlan.
+               fold_norm: bool = False,
+               schedule: Optional[TileSchedule] = None) -> PackedPlan:
+    """Stage 5 (PACK): gather one layer's (scheduled) tiles into a PackedPlan.
 
     gd: (R, C) matrix in weight-row space — a raw weight matrix for the
         generic executor, or folded differential conductances G+ - G- for the
@@ -255,6 +360,10 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
         kernel's digital accumulation directly yields de-normalized charge
         units (CIMEngine's serving path); False keeps raw summed counts
         (bitwise-comparable with the per-tile loop executor).
+    schedule: optional TileSchedule from `schedule_tiles` over the SAME tile
+        sequence — orders slots pass-major and pads idle slots with inert
+        zero tiles (denorm 0). None packs a single-pass plan in output-block
+        order (the PR-1 tile-grid layout).
     """
     tiles = [t for t in tiles if t.replica == 0]
     if not tiles:
@@ -266,47 +375,76 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
             raise ValueError(
                 f"tile offsets ({t.row0},{t.col0}) not aligned to "
                 f"({bk},{bn}) blocks — not a splitter-produced plan")
-    order = sorted(range(len(tiles)),
-                   key=lambda i: (tiles[i].col0, tiles[i].row0,
-                                  tiles[i].seq_slot))
+    if schedule is None:
+        order: List[Optional[int]] = sorted(
+            range(len(tiles)),
+            key=lambda i: (tiles[i].col0, tiles[i].row0, tiles[i].seq_slot))
+        n_passes, pass_len = 1, len(tiles)
+    else:
+        if len([i for i in schedule.order if i is not None]) != len(tiles):
+            raise ValueError("schedule does not cover this tile sequence "
+                             f"({schedule.order=} vs {len(tiles)} tiles)")
+        order = list(schedule.order)
+        n_passes, pass_len = schedule.n_passes, schedule.pass_len
     v_decr = jnp.broadcast_to(jnp.asarray(v_decr, jnp.float32),
-                              (len(tiles),))[jnp.asarray(order)]
-    tiles = [tiles[i] for i in order]
+                              (len(tiles),))
     n_rows = max(t.row0 + t.rows for t in tiles)
     n_cols = max(t.col0 + t.cols for t in tiles)
 
     gd = jnp.asarray(gd, jnp.float32)
-    gd_tiles, inv_tiles, den_tiles = [], [], []
-    for ti, t in enumerate(tiles):
-        blk = jnp.zeros((bk, bn), jnp.float32)
-        blk = blk.at[:t.rows, :t.cols].set(
+    zero_blk = jnp.zeros((bk, bn), jnp.float32)
+    zero_col = jnp.zeros((bn,), jnp.float32)
+    gd_tiles, inv_tiles, den_tiles, vd_slots = [], [], [], []
+    row_block, col_block, slot_pass, first_visit = [], [], [], []
+    seen_blocks: set = set()
+    for si, idx in enumerate(order):
+        if idx is None:                       # idle slot: a core sits out
+            gd_tiles.append(zero_blk)
+            inv_tiles.append(zero_col)
+            den_tiles.append(zero_col)        # accumulates exactly zero
+            vd_slots.append(jnp.asarray(1.0, jnp.float32))
+            row_block.append(0)
+            col_block.append(0)
+            slot_pass.append(si // pass_len)
+            first_visit.append(0)
+            continue
+        t = tiles[idx]
+        blk = zero_blk.at[:t.rows, :t.cols].set(
             jax.lax.dynamic_slice(gd, (t.row0, t.col0), (t.rows, t.cols)))
         gd_tiles.append(blk)
-        mask = jnp.zeros((bn,), jnp.float32).at[:t.cols].set(1.0)
+        mask = zero_col.at[:t.cols].set(1.0)
         if gsum is None:
             inv = mask                       # normalizer 1 on valid columns
             norm = mask
         else:
             norm_t = jnp.sum(jax.lax.dynamic_slice(
                 gsum, (t.row0, t.col0), (t.rows, t.cols)), axis=0)
-            norm = jnp.zeros((bn,), jnp.float32).at[:t.cols].set(norm_t)
+            norm = zero_col.at[:t.cols].set(norm_t)
             inv = jnp.where(norm > 0, 1.0 / jnp.maximum(norm, 1e-30), 0.0)
-        den_tiles.append((mask * norm * v_decr[ti]) if fold_norm else mask)
+        den_tiles.append((mask * norm * v_decr[idx]) if fold_norm else mask)
         inv_tiles.append(inv)
+        vd_slots.append(v_decr[idx])
+        row_block.append(t.row0 // bk)
+        col_block.append(t.col0 // bn)
+        slot_pass.append(si // pass_len)
+        first_visit.append(int(t.col0 // bn not in seen_blocks))
+        seen_blocks.add(t.col0 // bn)
 
     return PackedPlan(
         layer=tiles[0].layer, bk=bk, bn=bn, n_rows=n_rows, n_cols=n_cols,
-        row_block=tuple(t.row0 // bk for t in tiles),
-        col_block=tuple(t.col0 // bn for t in tiles),
-        seq_slot=tuple(t.seq_slot for t in tiles),
+        row_block=tuple(row_block),
+        col_block=tuple(col_block),
+        seq_slot=tuple(slot_pass),
+        first_visit=tuple(first_visit),
+        n_passes=n_passes,
         gd_tiles=jnp.stack(gd_tiles),
         inv_norm_tiles=jnp.stack(inv_tiles)[:, None, :],
-        v_decr_tiles=v_decr,
+        v_decr_tiles=jnp.stack(vd_slots),
         denorm_tiles=jnp.stack(den_tiles)[:, None, :])
 
 
 def multicore_mvm_packed(x, packed: PackedPlan, cfg=None, *, seed=0,
-                         interpret=None):
+                         interpret=None, scheduled=None):
     """Execute a whole layer's tile plan in ONE compiled Pallas dispatch.
 
     cfg=None: exact tiled matmul (identity epilogue) — returns x @ W in f32,
@@ -314,13 +452,17 @@ def multicore_mvm_packed(x, packed: PackedPlan, cfg=None, *, seed=0,
     datapath (quantized ADC counts accumulated per denorm_tiles semantics).
     Row-split partial sums accumulate digitally inside the kernel via
     output-block index maps; there is no Python loop and a single jit trace
-    per plan shape.
+    per plan shape. Multi-pass (seq-slot scheduled) plans take the
+    pass-major grid kernel automatically; `scheduled` forces either kernel
+    (benchmark use).
     """
     from ..kernels.cim_mvm.ops import cim_mvm_packed, packed_call
     if cfg is not None:
-        return cim_mvm_packed(x, packed, cfg, seed=seed, interpret=interpret)
+        return cim_mvm_packed(x, packed, cfg, seed=seed, interpret=interpret,
+                              scheduled=scheduled)
     return packed_call(x, packed, activation="identity", n_max=1,
-                       v_read=1.0, seed=seed, interpret=interpret)
+                       v_read=1.0, seed=seed, interpret=interpret,
+                       scheduled=scheduled)
 
 
 def multicore_mvm(x, weight, plan_tiles: Sequence[Tile], matmul_fn):

@@ -174,6 +174,29 @@ def shard_shape(shape, spec: P, mesh_shape: Dict[str, int]):
     return tuple(out)
 
 
+def shard_slice(x, spec: P, mesh_shape: Dict[str, int],
+                index: Dict[str, int]):
+    """Materialize the local block of `x` held by the shard at `index`
+    ({axis_name: position}) on a mesh of {axis_name: size}.
+
+    The deploy-time dual of `shard_shape`: per-TP-shard CIM engines program
+    each shard's OWN slice of a projection (one engine per shard —
+    models/nn.deploy_transformer_cim), so the compiler needs the local
+    data, not just the local shape. Axes absent from `index` take
+    position 0; raises like shard_shape when a dim is not divisible.
+    """
+    local = shard_shape(x.shape, spec, mesh_shape)
+    parts = tuple(spec) + (None,) * (x.ndim - len(tuple(spec)))
+    out = x
+    for d, (ax, loc) in enumerate(zip(parts, local)):
+        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        pos = 0
+        for a in axes:             # row-major over the axes tuple
+            pos = pos * mesh_shape.get(a, 1) + index.get(a, 0)
+        out = jax.lax.slice_in_dim(out, pos * loc, (pos + 1) * loc, axis=d)
+    return out
+
+
 def named_shardings(mesh: Mesh, spec_tree):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -21,10 +21,21 @@ Two kernels share that epilogue:
     block: tiles are pre-sorted so all tiles of one output block are
     consecutive grid steps — the first zero-initializes the block, the rest
     add `counts * denorm`. This replaces the per-tile Python loop executor
-    (one trace, one dispatch, batching-friendly) and is what CIMEngine
-    serves from.
+    (one trace, one dispatch, batching-friendly) and serves single-pass
+    (unmerged) plans.
 
-The bit-serial input loop of the chip is algebraically folded in both
+A third kernel executes SCHEDULED plans (core/mapping.schedule_tiles):
+
+  * `cim_mvm_scheduled_pallas` — pass-major grid (i, p, s): pass p runs the
+    tiles the chip fires simultaneously (one per core), successive passes
+    model the serialized access to merged cores (seq_slot > 0). Tile order
+    is no longer output-block-contiguous, so a scalar-prefetched
+    `first_visit` array replaces the col-discontinuity init test; idle
+    padding slots carry zero denorm and accumulate nothing. Single-pass
+    scheduled plans lower to the same math as the packed kernel (the pass
+    dimension is size 1), so unmerged plans pay no scheduling cost.
+
+The bit-serial input loop of the chip is algebraically folded in all three
 (sum_k 2^k p_k = x_int, exact for the linear datapath); per-phase
 non-ideality studies use the jnp oracle in ref.py.
 """
@@ -42,7 +53,7 @@ from ..prng import hash_uniform
 # Trace counters (incremented while jit TRACES each wrapper, not per call):
 # tests and benchmarks assert "one compiled dispatch per plan shape" with
 # these. Keyed by kernel name.
-TRACE_COUNTS = {"cim_mvm": 0, "cim_mvm_packed": 0}
+TRACE_COUNTS = {"cim_mvm": 0, "cim_mvm_packed": 0, "cim_mvm_scheduled": 0}
 
 
 def _pwl_tanh(steps, n_max: float):
@@ -233,5 +244,105 @@ def cim_mvm_packed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
         out_shape=jax.ShapeDtypeStruct((mp, n_col_blocks * bn), jnp.float32),
         interpret=interpret,
     )(row_idx, col_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
+      v_decr_tiles.astype(jnp.float32),
+      jnp.asarray(seed, jnp.int32).reshape(1))
+
+
+# --------------------------------------------------------- scheduled executor
+
+def _cim_sched_kernel(first_ref, row_ref, col_ref, x_ref, gd_ref, invn_ref,
+                      den_ref, vd_ref, seed_ref, out_ref, *, pass_len: int,
+                      v_read: float, activation: str, n_max: int):
+    """One grid step = one (batch block, pass, core slot) triple.
+
+    Pass-major order models the chip's time-shared merged cores: the same
+    output block can be revisited in a LATER pass (a seq-slot row split), so
+    initialization is steered by the prefetched `first_visit` array instead
+    of the packed kernel's col-discontinuity test. Idle padding slots have
+    zero denorm (and first_visit 0): they accumulate exactly nothing.
+    """
+    p, s = pl.program_id(1), pl.program_id(2)
+    t = p * pass_len + s
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q = jnp.dot(x_ref[...], gd_ref[0],
+                preferred_element_type=jnp.float32) * v_read * invn_ref[0]
+    counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
+                       ij=(pl.program_id(0), t))
+    out_ref[...] += counts * den_ref[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("row_block", "col_block", "first_visit", "n_passes",
+                     "activation", "n_max", "v_read", "bm", "interpret"))
+def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
+                             v_decr_tiles, seed, *,
+                             row_block, col_block, first_visit, n_passes: int,
+                             activation: str = "none", n_max: int = 127,
+                             v_read: float = 0.5, bm: int = 256,
+                             interpret: bool = False):
+    """Whole-layer scheduled CIM MVM: ONE pallas_call over a pass-major grid.
+
+    x:(M,K) f32 integer-valued activations; gd_tiles:(P*S,bk,bn) pass-major
+    slot tensors (idle slots zeroed); inv_norm_tiles/denorm_tiles:(P*S,1,bn);
+    v_decr_tiles:(P*S,); row_block/col_block/first_visit: static per-slot
+    tuples (scalar-prefetched). Returns (M_padded, n_col_blocks*bn) f32 —
+    caller slices to (M, C).
+    """
+    TRACE_COUNTS["cim_mvm_scheduled"] += 1
+    m, kdim = x.shape
+    n_slots, bk, bn = gd_tiles.shape
+    pass_len = n_slots // n_passes
+    bm = min(bm, m)
+    n_row_blocks = max(row_block) + 1
+    n_col_blocks = max(col_block) + 1
+
+    def pad(a, mults):
+        pads = [(0, -s % t) for s, t in zip(a.shape, mults)]
+        return jnp.pad(a, pads) if any(p[1] for p in pads) else a
+
+    xp = pad(x, (bm, 1))
+    xp = jnp.pad(xp, ((0, 0), (0, n_row_blocks * bk - kdim))) \
+        if kdim < n_row_blocks * bk else xp
+    mp = xp.shape[0]
+
+    first_idx = jnp.asarray(first_visit, jnp.int32)
+    row_idx = jnp.asarray(row_block, jnp.int32)
+    col_idx = jnp.asarray(col_block, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(mp // bm, n_passes, pass_len),
+        in_specs=[
+            pl.BlockSpec((bm, bk),
+                         lambda i, p, s, first, row, col:
+                         (i, row[p * pass_len + s])),
+            pl.BlockSpec((1, bk, bn),
+                         lambda i, p, s, first, row, col:
+                         (p * pass_len + s, 0, 0)),
+            pl.BlockSpec((1, 1, bn),
+                         lambda i, p, s, first, row, col:
+                         (p * pass_len + s, 0, 0)),
+            pl.BlockSpec((1, 1, bn),
+                         lambda i, p, s, first, row, col:
+                         (p * pass_len + s, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn),
+                               lambda i, p, s, first, row, col:
+                               (i, col[p * pass_len + s])),
+    )
+    return pl.pallas_call(
+        functools.partial(_cim_sched_kernel, pass_len=pass_len,
+                          v_read=v_read, activation=activation, n_max=n_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, n_col_blocks * bn), jnp.float32),
+        interpret=interpret,
+    )(first_idx, row_idx, col_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
       v_decr_tiles.astype(jnp.float32),
       jnp.asarray(seed, jnp.int32).reshape(1))

@@ -8,7 +8,10 @@ g_neg and the per-column normalizer) and returns signed ADC counts.
 (core/mapping.PackedPlan) in one compiled dispatch — the serving path used
 by core.cim.CIMEngine. Row-split partial sums are accumulated digitally
 inside the kernel; per-tile counts are weighted by the plan's denorm_tiles
-(valid-column mask, optionally with norm * v_decr folded in).
+(valid-column mask, optionally with norm * v_decr folded in). Plans whose
+schedule has more than one pass (merged cores time-shared via seq_slot)
+route to the pass-major scheduled kernel; single-pass plans keep the PR-1
+tile-grid kernel, so unmerged plans pay no scheduling cost.
 
 On this CPU container the kernels run in interpret mode; on TPU set
 interpret=False (default chosen from backend).
@@ -18,7 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import cim_mvm_pallas, cim_mvm_packed_pallas
+from .kernel import (cim_mvm_pallas, cim_mvm_packed_pallas,
+                     cim_mvm_scheduled_pallas)
 from ...core.types import CIMConfig
 
 
@@ -48,29 +52,51 @@ def cim_mvm(x_int, g_pos, g_neg, v_decr, cfg: CIMConfig, *, seed=0,
 
 
 def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
-                seed=0, bm=256, interpret=None):
-    """Single entry point to the packed kernel: validates the plan/input
+                seed=0, bm=256, interpret=None, scheduled=None):
+    """Single entry point to the packed kernels: validates the plan/input
     fit, runs ONE pallas_call over every tile, slices the padding off.
     All packed executors (CIM and raw-matmul) funnel through here so the
-    padding and error contracts cannot drift apart."""
+    padding and error contracts cannot drift apart.
+
+    scheduled: None routes by the plan (pass-major scheduled kernel iff
+    n_passes > 1); True/False forces a kernel (benchmark use — a scheduled
+    plan can always run the scheduled kernel, but multi-pass plans cannot
+    run the tile-grid one).
+    """
     if x.shape[-1] != packed.n_rows:
         raise ValueError(
             f"input has {x.shape[-1]} features but plan "
             f"'{packed.layer}' covers {packed.n_rows} weight rows")
     if interpret is None:
         interpret = _default_interpret()
-    out = cim_mvm_packed_pallas(
-        x.astype(jnp.float32), packed.gd_tiles, packed.inv_norm_tiles,
-        packed.denorm_tiles, packed.v_decr_tiles,
-        jnp.asarray(seed, jnp.int32),
-        row_block=packed.row_block, col_block=packed.col_block,
-        activation=activation, n_max=n_max, v_read=v_read, bm=bm,
-        interpret=interpret)
+    if scheduled is None:
+        scheduled = packed.n_passes > 1
+    if packed.n_passes > 1 and not scheduled:
+        raise ValueError(
+            f"plan '{packed.layer}' has {packed.n_passes} sequential passes; "
+            "the tile-grid kernel cannot serialize merged cores")
+    if scheduled:
+        out = cim_mvm_scheduled_pallas(
+            x.astype(jnp.float32), packed.gd_tiles, packed.inv_norm_tiles,
+            packed.denorm_tiles, packed.v_decr_tiles,
+            jnp.asarray(seed, jnp.int32),
+            row_block=packed.row_block, col_block=packed.col_block,
+            first_visit=packed.first_visit, n_passes=packed.n_passes,
+            activation=activation, n_max=n_max, v_read=v_read, bm=bm,
+            interpret=interpret)
+    else:
+        out = cim_mvm_packed_pallas(
+            x.astype(jnp.float32), packed.gd_tiles, packed.inv_norm_tiles,
+            packed.denorm_tiles, packed.v_decr_tiles,
+            jnp.asarray(seed, jnp.int32),
+            row_block=packed.row_block, col_block=packed.col_block,
+            activation=activation, n_max=n_max, v_read=v_read, bm=bm,
+            interpret=interpret)
     return out[:x.shape[0], :packed.n_cols]
 
 
 def cim_mvm_packed(x_int, packed, cfg: CIMConfig, *, seed=0, bm=256,
-                   interpret=None):
+                   interpret=None, scheduled=None):
     """Packed whole-layer CIM MVM: one pallas_call for every tile of the
     plan, returning the digitally-accumulated (B, C) float32 output — summed
     ADC counts when the plan was packed with fold_norm=False (loop-executor
@@ -82,4 +108,5 @@ def cim_mvm_packed(x_int, packed, cfg: CIMConfig, *, seed=0, bm=256,
     """
     return packed_call(x_int, packed, activation=cfg.activation,
                        n_max=cfg.out_mag_levels, v_read=cfg.v_read,
-                       seed=seed, bm=bm, interpret=interpret)
+                       seed=seed, bm=bm, interpret=interpret,
+                       scheduled=scheduled)

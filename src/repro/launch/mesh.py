@@ -18,3 +18,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def data_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def serving_mesh_shape(max_model: int = 16) -> dict:
+    """{'data': D, 'model': M} factoring of the ACTUAL local device count —
+    what the serving driver hands to per-shard deployments (one CIM engine
+    per TP shard, models/nn.deploy_transformer_cim) instead of a hardcoded
+    {'model': 1}. The model axis takes the largest power of two that
+    divides the device count, capped at `max_model` (the production mesh's
+    TP width); the rest is data parallelism. A 1-device dev box yields
+    {'data': 1, 'model': 1}."""
+    n = jax.device_count()
+    m = 1
+    while m * 2 <= min(n, max_model) and n % (m * 2) == 0:
+        m *= 2
+    return {"data": n // m, "model": m}

@@ -9,12 +9,17 @@ once, then decoded token-by-token (greedy) with the cache updated in place
 mesh the cache shards (batch over data axes, head_dim over model) per
 distributed/sharding.py.
 
---cim routes every dense-block linear projection through the packed NeuRRAM
-CIM engine (core.cim.CIMEngine): each layer's weights are planned onto
-simulated RRAM cores, programmed + calibrated + packed once before serving,
-and every projection then executes as ONE Pallas dispatch inside the
-prefill/decode jits — chip-sim inference as a serving scenario, not a
-per-layer demo. Plans are built per TP shard (distributed/sharding).
+--cim routes every packed-servable projection (dense blocks, shared experts
+and MoE routed-expert stacks) through the chip compiler
+(core.cim.compile_chip): each layer's weights run the full plan ->
+schedule -> program -> calibrate -> pack pipeline once before serving, and
+every projection then executes as one scheduled Pallas dispatch per TP
+shard inside the prefill/decode jits — chip-sim inference as a serving
+scenario, not a per-layer demo. The TP width comes from the ACTUAL serving
+mesh (launch/mesh.serving_mesh_shape): one engine per 'model'-axis shard,
+partial outputs combined inside the jit. --cim-ir-drop > 0 turns on the
+IR-drop planning constraint (vertical column splits); --cim-cores shrinks
+the per-chip core budget to force merged-core (seq-slot scheduled) plans.
 """
 from __future__ import annotations
 
@@ -44,22 +49,34 @@ def main(argv=None):
     ap.add_argument("--cim-mode", default="ideal",
                     choices=["ideal", "relaxed", "writeverify"],
                     help="conductance programming fidelity for --cim")
+    ap.add_argument("--cim-ir-drop", type=float, default=0.0,
+                    help="ir_drop_alpha for --cim: > 0 plans IR-drop-bounded "
+                         "vertical column splits")
+    ap.add_argument("--cim-cores", type=int, default=0,
+                    help="cores per chip for --cim (0 = NeuRRAM's 48); "
+                         "small values force merged-core scheduled plans")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     cfg = cfg.replace(dtype=jnp.float32 if args.smoke else cfg.dtype)
     if args.cim:
-        cfg = cfg.replace(cim_mode="packed", dtype=jnp.float32)
+        cfg = cfg.replace(cim_mode="packed", dtype=jnp.float32,
+                          cim_ir_drop=args.cim_ir_drop)
     key = jax.random.PRNGKey(0)
     params = T.init_params(key, cfg)
     if args.cim:
+        from ..core.types import CoreSpec
+        from .mesh import serving_mesh_shape
+        mesh_shape = serving_mesh_shape()
+        spec = CoreSpec(n_cores=args.cim_cores) if args.cim_cores else None
         t0 = time.time()
         params = nn.deploy_transformer_cim(
             jax.random.PRNGKey(7), params, cfg, mode=args.cim_mode,
-            mesh_shape={"model": 1})
+            mesh_shape=mesh_shape, spec=spec)
         n_packed = sum(1 for k in params["layers"] if k.endswith("_cim"))
-        print(f"cim: programmed+packed {n_packed} projection stacks "
-              f"x {cfg.n_layers} layers ({args.cim_mode}) "
+        print(f"cim: compiled {n_packed} projection stacks "
+              f"x {cfg.n_layers} layers ({args.cim_mode}, "
+              f"tp={mesh_shape.get('model', 1)}) "
               f"in {time.time() - t0:.1f}s")
     max_len = args.prompt_len + args.gen + (cfg.vis_patches or 0)
     cache = T.init_cache(cfg, args.batch, max_len, dtype=cfg.dtype)

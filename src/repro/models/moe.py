@@ -16,7 +16,12 @@ Two execution paths:
 The NeuRRAM mapping note (DESIGN.md section 4): routed experts are the
 datacenter-scale analogue of the chip's selectively power-gated CIM cores —
 top-k routing activates k of E weight-stationary arrays, exactly the paper's
-multi-core granularity argument.
+multi-core granularity argument. With cim_mode == "packed" that analogy is
+executed literally: each (layer, expert) has its own compiled chip
+(nn.deploy_transformer_cim), and the capacity-grouped dispatch below routes
+every expert's token group through that expert's scheduled packed Pallas
+dispatch (`_expert_matmul`); shared-expert projections ride the same
+cim_linear path as dense blocks.
 """
 from __future__ import annotations
 
@@ -38,6 +43,23 @@ def _router(x2, router_w, top_k: int):
     gate, idx = jax.lax.top_k(logits, top_k)            # (T, k)
     gate = jax.nn.softmax(gate, axis=-1)
     return gate, idx
+
+
+def _expert_matmul(p: Dict, name: str, xe, cfg, *, seed: int = 0):
+    """Batched expert matmul (E, C, d) @ (E, d, f) -> (E, C, f), routed
+    through each expert's packed CIM chip when one is deployed
+    (p['<name>_cim'], leading E dim) — E packed dispatches, one per
+    power-gated expert chip — and the float einsum otherwise."""
+    pcl = p.get(name + "_cim")
+    if pcl is None or getattr(cfg, "cim_mode", "off") != "packed":
+        return jnp.einsum("ecd,edf->ecf", xe, p[name])
+    from . import nn as nn_mod
+    ccfg = nn_mod.arch_cim_config(cfg)
+    ys = []
+    for e in range(cfg.n_experts):
+        pe = jax.tree_util.tree_map(lambda a: a[e], pcl)
+        ys.append(nn_mod.packed_linear(pe, xe[e], ccfg, seed=seed + e))
+    return jnp.stack(ys).astype(xe.dtype)
 
 
 def moe_ffn(p: Dict, x, cfg, capacity_factor: float = 1.25):
@@ -69,9 +91,10 @@ def moe_ffn(p: Dict, x, cfg, capacity_factor: float = 1.25):
     xe = xe[:-1].reshape(e, cap, d)
 
     # batched expert FFN: (E,C,d) @ (E,d,de) -> shards expert-parallel
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["ew_g"])) \
-        * jnp.einsum("ecd,edf->ecf", xe, p["ew_i"])
-    ye = jnp.einsum("ecf,efd->ecd", h, p["ew_o"])        # (E,C,d)
+    # (or, packed: one CIM dispatch per routed expert chip)
+    h = jax.nn.silu(_expert_matmul(p, "ew_g", xe, cfg, seed=11)) \
+        * _expert_matmul(p, "ew_i", xe, cfg, seed=211)
+    ye = _expert_matmul(p, "ew_o", h, cfg, seed=411)     # (E,C,d)
 
     # combine: weighted scatter-add back to tokens
     ye_flat = ye.reshape(e * cap, d)
@@ -80,8 +103,19 @@ def moe_ffn(p: Dict, x, cfg, capacity_factor: float = 1.25):
     y2 = jnp.zeros((t, d), x.dtype).at[st].add(contrib)
 
     if cfg.n_shared_experts > 0:
-        hs = jax.nn.silu(x2 @ p["sw_g"]) * (x2 @ p["sw_i"])
-        y2 = y2 + hs @ p["sw_o"]
+        if getattr(cfg, "cim_mode", "off") == "packed":
+            # packed serving only: noisy/chipsim training modes keep the
+            # exact float matmuls shared experts always used
+            from .transformer import cim_linear
+            hs = jax.nn.silu(cim_linear(x2, p["sw_g"], cfg, seed=611,
+                                        packed=p.get("sw_g_cim"))) \
+                * cim_linear(x2, p["sw_i"], cfg, seed=612,
+                             packed=p.get("sw_i_cim"))
+            y2 = y2 + cim_linear(hs, p["sw_o"], cfg, seed=613,
+                                 packed=p.get("sw_o_cim"))
+        else:
+            hs = jax.nn.silu(x2 @ p["sw_g"]) * (x2 @ p["sw_i"])
+            y2 = y2 + hs @ p["sw_o"]
     return y2.reshape(b, s, d)
 
 
@@ -91,6 +125,9 @@ def moe_ffn_ep_shardmap(p: Dict, x, cfg, mesh, capacity_factor: float = 1.25,
     local tokens and all_to_all's them to the expert owners.
 
     x sharded P(data_axes, None, None); expert weights P(model_axis, ...).
+    Float path only — packed CIM serving routes through moe_ffn's sort
+    dispatch instead (transformer.dense_block forces this), since only that
+    path drives the per-expert compiled chips.
     """
     from jax.experimental.shard_map import shard_map
     axes = [a for a in data_axes if a in mesh.axis_names]

@@ -16,13 +16,14 @@ the bias is split evenly over B appended rows driven with full-scale inputs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..core.types import CIMConfig
+from ..core.types import CIMConfig, CoreSpec, NonIdealityConfig
 from ..core.quant import pact_quantize
 from ..core.noise import weight_noise
 from ..core import cim as cim_api
@@ -163,85 +164,226 @@ def chip_conv(cl: ChipLinear, x, cfg: CIMConfig, kh, kw_, stride=1,
 
 # --------------------------------------------- packed CIM serving (engine)
 
-# Dense-block projection matrices the packed engine can serve. MoE expert
-# stacks and recurrent mixes keep the float path (future work — ROADMAP).
-PACKED_PROJ_KEYS = ("wq", "wk", "wv", "wo", "w_g", "w_i", "w_o")
+# Projection matrices the packed serving path covers: dense-block + shared-
+# expert projections (2-D per layer) and routed-expert stacks (3-D per
+# layer, one chip per expert). Recurrent mixes (rwkv/mamba) keep the float
+# path (future work — ROADMAP).
+PACKED_PROJ_KEYS = ("wq", "wk", "wv", "wo", "w_g", "w_i", "w_o",
+                    "sw_g", "sw_i", "sw_o")
+PACKED_EXPERT_KEYS = ("ew_g", "ew_i", "ew_o")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedPackedLayer:
+    """One projection's per-TP-shard packed engines, plus how to combine
+    their outputs: Megatron-style column-parallel shards each produce a
+    slice of the output (concatenate = the all-gather over 'model'),
+    row-parallel shards each consume a slice of the input and produce
+    partial sums (add = the psum over 'model'). `shards` is a
+    PackedCIMLayer pytree whose arrays carry a leading shard dim (further
+    leading dims appear when layer stacks are scanned)."""
+    shards: Any            # PackedCIMLayer, leading (n_shards,) on arrays
+    partition: str         # 'col' | 'row' | 'none'
+    n_shards: int
+
+    def tree_flatten(self):
+        return (self.shards,), (self.partition, self.n_shards)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+def sharded_packed_forward(spl: ShardedPackedLayer, x, ccfg: CIMConfig, *,
+                           seed: int = 0):
+    """Serve one projection through its per-TP-shard engines.
+
+    x: (B, R_global) float. Each shard is one packed Pallas dispatch over
+    that shard's own compiled plan; 'row' shards read their input slice and
+    their partial outputs are summed — the digital analogue of the psum
+    over the 'model' axis (on a real mesh this add lowers to an
+    all-reduce; here the shard loop is unrolled inside the serving jit, and
+    identical per-shard plan shapes share one kernel trace).
+    """
+    outs = []
+    for s in range(spl.n_shards):
+        pcl = jax.tree_util.tree_map(lambda a: a[s], spl.shards)
+        xs = x
+        if spl.partition == "row":
+            r = x.shape[-1] // spl.n_shards
+            xs = jax.lax.slice_in_dim(x, s * r, (s + 1) * r, axis=-1)
+        outs.append(cim_api.packed_forward(pcl, xs, ccfg, seed=seed))
+    if spl.n_shards == 1:
+        return outs[0]
+    if spl.partition == "row":
+        return functools.reduce(jnp.add, outs)       # psum over 'model'
+    return jnp.concatenate(outs, axis=-1)            # all-gather over 'model'
 
 
 def deploy_packed_stack(key, stacked_w: Dict[str, jax.Array],
                         ccfg: CIMConfig, *, mode: str = "ideal",
-                        in_alpha: float = 3.0, spec=None
-                        ) -> Dict[str, Any]:
-    """Program a scanned layer stack's weight matrices onto packed engines.
+                        in_alpha: float = 3.0,
+                        spec: Optional[CoreSpec] = None) -> Dict[str, Any]:
+    """Compile a scanned layer stack's weight matrices into packed chips.
 
     stacked_w: name -> (L, R, C) stacked weights (one scan step per layer),
     already sliced to the local TP shard if sharded (deploy_transformer_cim
-    does this via distributed/sharding.shard_shape).
-    Each layer index gets its own CIMEngine (one chip per transformer
-    layer): all of that layer's matrices are planned onto the cores
-    together, programmed, calibrated and packed ONCE. The resulting per-
-    layer PackedCIMLayer pytrees are stacked back over L — their static
-    plan geometry is pytree aux data, so `lax.scan` slices them without
-    retracing and every projection stays a single Pallas dispatch per step.
+    does this via distributed/sharding.shard_slice).
+    Each layer index gets its own `core.cim.compile_chip` run (one chip per
+    transformer layer): all of that layer's matrices go through the full
+    plan -> schedule -> program -> calibrate -> pack pipeline ONCE. The
+    resulting per-layer PackedCIMLayer pytrees are stacked back over L —
+    their static plan geometry is pytree aux data, so `lax.scan` slices
+    them without retracing and every projection stays a single Pallas
+    dispatch per step.
     """
-    from ..core.types import CoreSpec
     names = sorted(stacked_w)
     n_layers = stacked_w[names[0]].shape[0]
     spec = spec or CoreSpec()
 
     per_layer = []
     for li in range(n_layers):
-        eng = cim_api.CIMEngine(ccfg, spec, mode=mode)
-        eng.program(jax.random.fold_in(key, li),
-                    {n: stacked_w[n][li].astype(jnp.float32)
-                     for n in names},
-                    in_alpha=in_alpha)
-        per_layer.append(eng.layers)
+        chip = cim_api.compile_chip(
+            jax.random.fold_in(key, li),
+            {n: stacked_w[n][li].astype(jnp.float32) for n in names},
+            ccfg, spec, mode, in_alpha=in_alpha)
+        per_layer.append(chip.layers)
     return {n: jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[pl[n] for pl in per_layer])
         for n in names}
 
 
 def packed_linear(pcl, x, ccfg: CIMConfig, *, seed: int = 0):
-    """x: (B, n_in) float -> (B, n_out) float through one packed dispatch.
-    pcl: a (scan-sliced) core.cim.PackedCIMLayer."""
+    """x: (B, n_in) float -> (B, n_out) float through one packed dispatch
+    (or one per shard). pcl: a (scan-sliced) core.cim.PackedCIMLayer or
+    ShardedPackedLayer."""
+    if isinstance(pcl, ShardedPackedLayer):
+        return sharded_packed_forward(pcl, x.astype(jnp.float32), ccfg,
+                                      seed=seed)
     return cim_api.packed_forward(pcl, x.astype(jnp.float32), ccfg,
                                   seed=seed)
 
 
+def _partition_kind(spec) -> str:
+    """'col' when the stacked param's output dim is on 'model' (column-
+    parallel in-projection), 'row' when an inner/input dim is (row-parallel
+    out-projection), 'none' when replicated."""
+    parts = tuple(spec)
+    for d, ax in enumerate(parts):
+        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        if "model" in axes:
+            return "col" if d == len(parts) - 1 else "row"
+    return "none"
+
+
+def arch_cim_config(arch_cfg) -> CIMConfig:
+    """The CIMConfig a transformer arch serves its packed projections with
+    (shared by deploy and the in-jit forward so they cannot drift)."""
+    return CIMConfig(
+        in_bits=arch_cfg.cim_in_bits, out_bits=arch_cfg.cim_out_bits,
+        nonideal=NonIdealityConfig(
+            ir_drop_alpha=getattr(arch_cfg, "cim_ir_drop", 0.0)))
+
+
 def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
                            in_alpha: float = 3.0,
-                           mesh_shape: Optional[Dict[str, int]] = None):
-    """Program every dense-block linear projection of a transformer onto
-    packed CIM engines and return params augmented with '<name>_cim'
-    entries (stacked PackedCIMLayer pytrees) that models/transformer routes
-    through when arch_cfg.cim_mode == "packed".
+                           mesh_shape: Optional[Dict[str, int]] = None,
+                           spec: Optional[CoreSpec] = None):
+    """Compile every packed-servable projection of a transformer onto CIM
+    chips and return params augmented with '<name>_cim' entries that
+    models/transformer routes through when arch_cfg.cim_mode == "packed".
 
-    Plans are built per TP shard via distributed/sharding.param_pspecs +
-    shard_shape (a 'core' is an intra-shard unit); with a 1-way model axis
-    the local shape is the global one.
+    Tensor parallelism: ONE ENGINE PER TP SHARD. Each shard of the 'model'
+    mesh axis gets its own chip per transformer layer, compiled from that
+    shard's local slice of every projection (distributed/sharding
+    .param_pspecs + shard_slice — a NeuRRAM 'core' is an intra-shard
+    unit). At serving time column-parallel shard outputs concatenate and
+    row-parallel partial outputs are summed over the 'model' axis inside
+    the jit'd forward (ShardedPackedLayer). Projections whose sharded dim
+    is not divisible by the axis size fall back to a single replicated
+    engine, mirroring distributed/sharding.fit_pspecs.
+
+    MoE expert stacks (ew_g/ew_i/ew_o, (L, E, d, de)): one chip per
+    (layer, expert) — the paper's power-gated-core granularity — stacked
+    back over E then L, and served through models/moe.moe_ffn's
+    capacity-grouped dispatch (each routed group runs its own expert's
+    packed dispatch).
+
+    spec: CoreSpec threaded through to every compile_chip call.
     """
     if "layers" not in params or "wq" not in params["layers"]:
         raise ValueError("packed CIM serving currently covers dense "
                          "attention+MLP stacks (params['layers']['wq'])")
-    ccfg = CIMConfig(in_bits=arch_cfg.cim_in_bits,
-                     out_bits=arch_cfg.cim_out_bits)
+    from ..distributed.sharding import param_pspecs, shard_slice, shard_shape
+    ccfg = arch_cim_config(arch_cfg)
+    spec = spec or CoreSpec()
+    mesh_shape = dict(mesh_shape) if mesh_shape else {"model": 1}
+    n_sh = max(int(mesh_shape.get("model", 1)), 1)
+
     stacked = {n: params["layers"][n] for n in PACKED_PROJ_KEYS
                if n in params["layers"]}
-    if mesh_shape:
-        # per-TP-shard planning: slice shard 0's local projection (tp>1
-        # serving runs one engine per shard; the plan is shard-local)
-        from ..distributed.sharding import param_pspecs, shard_shape
-        specs = param_pspecs({"layers": stacked})["layers"]
-        stacked = {
-            n: w[:, :shard_shape(w.shape, specs[n], mesh_shape)[1],
-                 :shard_shape(w.shape, specs[n], mesh_shape)[2]]
-            for n, w in stacked.items()}
-    packed = deploy_packed_stack(key, stacked, ccfg, mode=mode,
-                                 in_alpha=in_alpha)
+    specs = param_pspecs({"layers": dict(stacked)})["layers"]
+    kinds = {}
+    for n, w in stacked.items():
+        try:
+            shard_shape(w.shape, specs[n], {"model": n_sh})
+            kinds[n] = _partition_kind(specs[n]) if n_sh > 1 else "none"
+        except ValueError:      # not divisible: replicate (fit_pspecs rule)
+            kinds[n] = "none"
+
+    # one chip stack per TP shard. Replicated ('none') projections compile
+    # on their OWN chip stack: mixing them into shard 0's chip would make
+    # the co-allocation planner produce shard-0 plans that diverge from the
+    # other shards' (different merges/schedules), breaking the cross-shard
+    # stack below.
+    sharded_names = sorted(n for n in stacked if kinds[n] != "none")
+    none_names = sorted(n for n in stacked if kinds[n] == "none")
+    shard_layers = []
+    if sharded_names:
+        for s in range(n_sh):
+            local = {n: shard_slice(stacked[n], specs[n], {"model": n_sh},
+                                    {"model": s}) for n in sharded_names}
+            shard_layers.append(deploy_packed_stack(
+                jax.random.fold_in(key, s), local, ccfg, mode=mode,
+                in_alpha=in_alpha, spec=spec))
+    none_layers = {}
+    if none_names:
+        none_layers = deploy_packed_stack(
+            jax.random.fold_in(key, n_sh), {n: stacked[n]
+                                            for n in none_names},
+            ccfg, mode=mode, in_alpha=in_alpha, spec=spec)
+
     new_layers = dict(params["layers"])
-    for n, pcl in packed.items():
-        new_layers[n + "_cim"] = pcl
+    for n in stacked:
+        if kinds[n] == "none":
+            pcl = jax.tree_util.tree_map(lambda a: a[:, None],
+                                         none_layers[n])
+            new_layers[n + "_cim"] = ShardedPackedLayer(pcl, "none", 1)
+        else:
+            pcl = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=1),
+                *[sl[n] for sl in shard_layers])
+            new_layers[n + "_cim"] = ShardedPackedLayer(pcl, kinds[n], n_sh)
+
+    # routed-expert stacks: one chip per (layer, expert) — each expert's
+    # (L, d, de) slice is itself a scanned layer stack, so reuse
+    # deploy_packed_stack per expert and stack the results over E
+    expert_w = {n: params["layers"][n] for n in PACKED_EXPERT_KEYS
+                if n in params["layers"]}
+    if expert_w:
+        names = sorted(expert_w)
+        n_experts = expert_w[names[0]].shape[1]
+        per_exp = [deploy_packed_stack(
+            jax.random.fold_in(key, 7919 + e),
+            {n: expert_w[n][:, e] for n in names},
+            ccfg, mode=mode, in_alpha=in_alpha, spec=spec)
+            for e in range(n_experts)]
+        for n in names:
+            new_layers[n + "_cim"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=1),
+                *[pe[n] for pe in per_exp])
+
     out = dict(params)
     out["layers"] = new_layers
     return out

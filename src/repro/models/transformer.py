@@ -25,8 +25,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..core.quant import pact_quantize
-from ..core.types import CIMConfig
-from ..core.cim import packed_forward
 from ..kernels.prng import hash_normal
 
 
@@ -88,6 +86,9 @@ class ArchConfig:
     cim_in_bits: int = 4
     cim_out_bits: int = 8
     cim_noise: float = 0.1
+    # IR-drop planning constraint for packed deploys: alpha > 0 makes the
+    # chip compiler split wide matrices vertically (mapping.ir_drop_max_cols)
+    cim_ir_drop: float = 0.0
 
     @property
     def head_dim(self) -> int:
@@ -112,14 +113,17 @@ def cim_linear(x, w, cfg: ArchConfig, *, seed: int = 0, packed=None):
              matmul (the full oracle lives in kernels/cim_mvm/ref.py).
     packed:  the real programmed chip datapath, served by the packed-tile
              executor — `packed` is this projection's (scan-sliced)
-             PackedCIMLayer from nn.deploy_transformer_cim; the whole tile
-             plan runs as ONE Pallas dispatch inside the serving jit.
+             ShardedPackedLayer (or bare PackedCIMLayer) from
+             nn.deploy_transformer_cim; each TP shard's scheduled tile plan
+             runs as ONE Pallas dispatch inside the serving jit, with
+             row-parallel partials psum'd over the 'model' axis.
     """
     if cfg.cim_mode == "packed" and packed is not None:
-        ccfg = CIMConfig(in_bits=cfg.cim_in_bits, out_bits=cfg.cim_out_bits)
+        from . import nn as nn_mod
+        ccfg = nn_mod.arch_cim_config(cfg)
         shape = x.shape
-        y = packed_forward(packed, x.reshape(-1, shape[-1]).astype(
-            jnp.float32), ccfg, seed=seed)
+        y = nn_mod.packed_linear(packed, x.reshape(-1, shape[-1]), ccfg,
+                                 seed=seed)
         return y.reshape(*shape[:-1], y.shape[-1]).astype(x.dtype)
     if cfg.cim_mode in ("off", "packed"):
         # packed mode without a deployed plan (encoder, unembed, MoE expert
@@ -425,7 +429,11 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
 
     h2 = rms_norm(x, p["ln2"])
     if "ew_g" in p:                              # MoE FFN (param-keyed so
-        if cfg.moe_impl == "ep" and moe_mod.MESH_FOR_EP is not None:
+        # packed CIM serving always takes the sort-based dispatch: only it
+        # routes token groups through the per-expert compiled chips — the
+        # shard_map EP path would silently fall back to float einsums
+        if cfg.moe_impl == "ep" and moe_mod.MESH_FOR_EP is not None \
+                and cfg.cim_mode != "packed":
             y = moe_mod.moe_ffn_ep_shardmap(
                 p, h2, cfg, moe_mod.MESH_FOR_EP,
                 data_axes=tuple(cfg.batch_axes or ("data",)))

@@ -230,10 +230,23 @@ def test_engine_single_trace_per_plan_shape():
 
 
 def test_engine_rejects_oracle_only_configs():
+    """Wire IR / coupling / ADC-offset spread still need the bit-serial
+    oracle; IR drop no longer does — the planner mitigates it with
+    vertical column splits (mapping.ir_drop_max_cols), so the engine
+    accepts such configs and plans narrower tiles."""
+    for ni in (core.NonIdealityConfig(coupling_sigma=0.1),
+               core.NonIdealityConfig(wire_r_alpha=1e-4),
+               core.NonIdealityConfig(adc_offset_sigma=0.01)):
+        with pytest.raises(ValueError):
+            core.CIMEngine(CIMConfig(in_bits=4, out_bits=8, nonideal=ni))
     cfg = CIMConfig(in_bits=4, out_bits=8,
-                    nonideal=core.NonIdealityConfig(ir_drop_alpha=1e-4))
-    with pytest.raises(ValueError):
-        core.CIMEngine(cfg)
+                    nonideal=core.NonIdealityConfig(ir_drop_alpha=2e-7))
+    eng = core.CIMEngine(cfg, mode="ideal")
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (100, 200))
+    plan = eng.program(jax.random.PRNGKey(1), {"a": w})
+    cap = core.ir_drop_max_cols(cfg)
+    assert max(t.cols for t in plan.tiles_for("a")) <= cap
+    assert len(plan.tiles_for("a")) > 1
 
 
 def test_engine_multi_layer_plan_shares_cores():

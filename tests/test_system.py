@@ -67,3 +67,26 @@ def test_serve_driver_cim_packed():
     # a handful of traces (prefill + decode shapes x projection shapes),
     # NOT per tile per token: 7 projections x 2 shapes is the ceiling
     assert TRACE_COUNTS["cim_mvm_packed"] - before <= 14
+
+
+def test_serve_driver_cim_merged_core_scheduled():
+    """--cim-cores 4 forces merged-core plans on the smoke arch (small
+    d_model): serving must route through the pass-major SCHEDULED kernel
+    end-to-end, still without per-tile retracing."""
+    from repro.launch.serve import main
+    from repro.kernels.cim_mvm.kernel import TRACE_COUNTS
+    before_s = TRACE_COUNTS["cim_mvm_scheduled"]
+    out = main(["--arch", "gemma2-9b", "--smoke", "--cim", "--cim-cores",
+                "4", "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert out.shape == (2, 4)
+    assert TRACE_COUNTS["cim_mvm_scheduled"] - before_s > 0
+    assert TRACE_COUNTS["cim_mvm_scheduled"] - before_s <= 14
+
+
+def test_serve_driver_cim_ir_drop_split():
+    """--cim-ir-drop > 0 plans IR-drop-bounded vertical column splits and
+    serves them through the packed path end-to-end."""
+    from repro.launch.serve import main
+    out = main(["--arch", "gemma2-9b", "--smoke", "--cim", "--cim-ir-drop",
+                "2e-7", "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert out.shape == (2, 4)

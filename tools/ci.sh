@@ -1,21 +1,35 @@
 #!/usr/bin/env bash
 # CI tiers for the NeuRRAM reproduction.
 #
-#   tools/ci.sh            fast tier: pytest -m "not slow"  (< ~2 min)
+#   tools/ci.sh            fast tier: pytest -m "not slow" + bench-smoke
 #   tools/ci.sh full       tier-1:    the whole suite, slow tests included
+#   tools/ci.sh bench      bench-smoke only (writes BENCH_mapping.json)
 #
-# The fast tier is the pre-commit loop: kernels, planner/packing, engine,
-# models, distributed. The slow tier adds the pulse-level write-verify
-# simulator, chip-in-the-loop fine-tuning and the end-to-end train/serve
-# drivers (several minutes of simulated physics).
+# The fast tier is the pre-commit loop: kernels, planner/scheduler/packing,
+# engine, models, distributed — followed by a bench-smoke that runs
+# benchmarks/bench_mapping.py in quick mode and records the executor
+# timings to BENCH_mapping.json (the perf trajectory; it also enforces the
+# "scheduled dispatch no slower than packed on unmerged plans" contract).
+# The slow tier adds the pulse-level write-verify simulator,
+# chip-in-the-loop fine-tuning and the end-to-end train/serve drivers
+# (several minutes of simulated physics).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+bench_smoke() {
+  echo "== bench-smoke: mapping executors =="
+  python -m benchmarks.bench_mapping --quick --out BENCH_mapping.json
+}
+
 tier="${1:-fast}"
 case "$tier" in
-  fast) exec python -m pytest -q -m "not slow" ;;
+  fast)
+    python -m pytest -q -m "not slow"
+    bench_smoke
+    ;;
   full) exec python -m pytest -x -q ;;
-  *) echo "usage: tools/ci.sh [fast|full]" >&2; exit 2 ;;
+  bench) bench_smoke ;;
+  *) echo "usage: tools/ci.sh [fast|full|bench]" >&2; exit 2 ;;
 esac
