@@ -8,8 +8,11 @@ forced through the pass-major grid kernel that serializes merged cores),
 across three plan shapes plus a genuinely merged (multi-pass) plan. The
 derived column reports how many kernel jit traces the executor cost — every
 packed path's headline is ONE trace/dispatch per plan regardless of tile
-count, and the scheduled dispatch must be no slower than the packed kernel
-on unmerged (single-pass) plans.
+count. That trace-count contract is deterministic and always enforced; the
+"scheduled no slower than 2x packed on unmerged plans" wall-clock ratio is
+reported as a warning by default (shared CI machines make timing gates
+flaky) and only fails the run under --enforce-timing (the dedicated bench
+job).
 
 CLI (the CI bench-smoke step):
 
@@ -38,8 +41,8 @@ MERGED = ("merged", 300, 500, 3)
 
 def _time(fn, n=5):
     """Best-of-n wall clock in us: min is robust to GC pauses / noisy
-    neighbors, which matters because the quick-mode gate below fails CI on
-    a timing ratio."""
+    neighbors — the ratio below is only advisory by default, but a clean
+    measurement keeps the warning signal meaningful."""
     fn()  # compile
     best = float("inf")
     for _ in range(n):
@@ -130,6 +133,11 @@ def main(argv=None):
                     help="CI bench-smoke: fewer shapes/reps")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON (perf trajectory seed)")
+    ap.add_argument("--enforce-timing", action="store_true",
+                    help="fail (not just warn) when the scheduled dispatch "
+                         "exceeds 2x the packed kernel on unmerged plans — "
+                         "for the dedicated bench job, not the shared fast "
+                         "tier where wall-clock gates flake")
     args = ap.parse_args(argv)
     rows = run(quick=args.quick)
     print("name,us_per_call,derived")
@@ -141,15 +149,24 @@ def main(argv=None):
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {args.out}")
-    # contract: scheduled dispatch no slower than the packed kernel on
-    # unmerged plans (generous 2x headroom for timer noise in CI)
+    # deterministic contract (always enforced): every packed/scheduled
+    # executor costs exactly ONE kernel trace per plan shape
+    for name, _, tr in rows:
+        if name.startswith(("mapping_packed_", "mapping_sched_")) and tr != 1:
+            raise SystemExit(
+                f"packed-executor trace contract broken on {name}: "
+                f"{tr} traces (expected 1)")
+    # advisory wall-clock ratio: scheduled dispatch vs the packed kernel on
+    # unmerged plans (2x headroom; warning unless --enforce-timing)
     by = {name.rsplit("_t", 1)[0]: us for name, us, _ in rows}
     for tag in [n for n in by if n.startswith("mapping_packed_")]:
         stag = tag.replace("mapping_packed_", "mapping_sched_")
         if stag in by and by[stag] > 2.0 * by[tag]:
-            raise SystemExit(
-                f"scheduled dispatch regressed vs packed on {tag}: "
-                f"{by[stag]:.1f}us vs {by[tag]:.1f}us")
+            msg = (f"scheduled dispatch regressed vs packed on {tag}: "
+                   f"{by[stag]:.1f}us vs {by[tag]:.1f}us")
+            if args.enforce_timing:
+                raise SystemExit(msg)
+            print(f"WARNING: {msg}")
     return rows
 
 

@@ -232,8 +232,10 @@ class CompiledChip:
 
     Pytree: the packed per-layer tensors (`layers`) are children — so a
     CompiledChip can ride through jit/tree_map — while the config and the
-    intermediate plan/schedule artifacts are (identity-hashed) aux data
-    kept for introspection, tests and re-planning.
+    intermediate plan/schedule artifacts are aux data kept for
+    introspection, tests and re-planning. jit hashes the treedef, so aux
+    must be hashable: the schedules dict travels as a sorted items tuple
+    (TileSchedule is frozen), and the Plan is identity-hashed.
     """
     cfg: CIMConfig
     spec: CoreSpec
@@ -244,11 +246,13 @@ class CompiledChip:
 
     def tree_flatten(self):
         return (self.layers,), (self.cfg, self.spec, self.mode, self.plan,
-                                self.schedules)
+                                tuple(sorted(self.schedules.items())))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*aux, layers=children[0])
+        cfg, spec, mode, plan, sched_items = aux
+        return cls(cfg=cfg, spec=spec, mode=mode, plan=plan,
+                   schedules=dict(sched_items), layers=children[0])
 
     def __contains__(self, name: str) -> bool:
         return name in self.layers

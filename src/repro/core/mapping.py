@@ -24,9 +24,11 @@ and fifth stages live here:
     control flow. All tiles of a layer are gathered into padded stacked
     tensors (`gd_tiles (T, bk, bn)`, `inv_norm_tiles (T, 1, bn)`,
     `v_decr_tiles (T,)`, `denorm_tiles (T, 1, bn)`) plus static
-    `row_block/col_block/first_visit` index tuples, and the whole layer
-    executes as ONE Pallas dispatch (`kernels/cim_mvm`) with row-split
-    partial sums accumulated digitally via output-block index maps.
+    `row_block/col_block` index tuples, and the whole layer executes as
+    ONE Pallas dispatch (`kernels/cim_mvm`) with row-split partial sums
+    accumulated digitally — inside the kernel via output-block index maps
+    for single-pass plans, after the dispatch for pass-major scheduled
+    plans (whose revisits of a column block are not grid-consecutive).
 
 Stages 3 and 4 (PROGRAM, CALIBRATE) live in `core.cim`, which composes all
 five into `compile_chip` -> `CompiledChip`, the artifact `CIMEngine` and
@@ -293,11 +295,10 @@ class PackedPlan:
                       tiles occupy slots [p*pass_len, (p+1)*pass_len)) with
                       idle slots pointing at block 0.
       seq_slot:       per-slot pass index (0 for unscheduled plans).
-      first_visit:    1 where a slot is the first in execution order to touch
-                      its output block (the kernel zero-initializes there and
-                      accumulates everywhere else); 0 on idle padding.
       n_passes:       pass count; > 1 routes execution to the pass-major
-                      scheduled kernel (kernels/cim_mvm).
+                      scheduled kernel (kernels/cim_mvm), which writes one
+                      partial block per slot and reduces them per column
+                      block after the dispatch.
     """
     layer: str
     bk: int
@@ -307,7 +308,6 @@ class PackedPlan:
     row_block: Tuple[int, ...]
     col_block: Tuple[int, ...]
     seq_slot: Tuple[int, ...]
-    first_visit: Tuple[int, ...]
     n_passes: int
     gd_tiles: jax.Array
     inv_norm_tiles: jax.Array
@@ -334,8 +334,7 @@ class PackedPlan:
         children = (self.gd_tiles, self.inv_norm_tiles, self.v_decr_tiles,
                     self.denorm_tiles)
         aux = (self.layer, self.bk, self.bn, self.n_rows, self.n_cols,
-               self.row_block, self.col_block, self.seq_slot,
-               self.first_visit, self.n_passes)
+               self.row_block, self.col_block, self.seq_slot, self.n_passes)
         return children, aux
 
     @classmethod
@@ -381,9 +380,14 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
             key=lambda i: (tiles[i].col0, tiles[i].row0, tiles[i].seq_slot))
         n_passes, pass_len = 1, len(tiles)
     else:
-        if len([i for i in schedule.order if i is not None]) != len(tiles):
+        # the non-idle slots must be exactly a permutation of the tiles —
+        # a bare count check would let a duplicated index pack one tile
+        # twice while silently dropping another
+        covered = sorted(i for i in schedule.order if i is not None)
+        if covered != list(range(len(tiles))):
             raise ValueError("schedule does not cover this tile sequence "
-                             f"({schedule.order=} vs {len(tiles)} tiles)")
+                             f"exactly once ({schedule.order=} vs "
+                             f"{len(tiles)} tiles)")
         order = list(schedule.order)
         n_passes, pass_len = schedule.n_passes, schedule.pass_len
     v_decr = jnp.broadcast_to(jnp.asarray(v_decr, jnp.float32),
@@ -395,8 +399,7 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
     zero_blk = jnp.zeros((bk, bn), jnp.float32)
     zero_col = jnp.zeros((bn,), jnp.float32)
     gd_tiles, inv_tiles, den_tiles, vd_slots = [], [], [], []
-    row_block, col_block, slot_pass, first_visit = [], [], [], []
-    seen_blocks: set = set()
+    row_block, col_block, slot_pass = [], [], []
     for si, idx in enumerate(order):
         if idx is None:                       # idle slot: a core sits out
             gd_tiles.append(zero_blk)
@@ -406,7 +409,6 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
             row_block.append(0)
             col_block.append(0)
             slot_pass.append(si // pass_len)
-            first_visit.append(0)
             continue
         t = tiles[idx]
         blk = zero_blk.at[:t.rows, :t.cols].set(
@@ -427,15 +429,12 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
         row_block.append(t.row0 // bk)
         col_block.append(t.col0 // bn)
         slot_pass.append(si // pass_len)
-        first_visit.append(int(t.col0 // bn not in seen_blocks))
-        seen_blocks.add(t.col0 // bn)
 
     return PackedPlan(
         layer=tiles[0].layer, bk=bk, bn=bn, n_rows=n_rows, n_cols=n_cols,
         row_block=tuple(row_block),
         col_block=tuple(col_block),
         seq_slot=tuple(slot_pass),
-        first_visit=tuple(first_visit),
         n_passes=n_passes,
         gd_tiles=jnp.stack(gd_tiles),
         inv_norm_tiles=jnp.stack(inv_tiles)[:, None, :],

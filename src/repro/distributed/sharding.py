@@ -137,8 +137,7 @@ def zero_pspecs(shape_tree, spec_tree, mesh: Mesh,
             return P(*parts)
         used = set()
         for ax in parts:
-            for a_ in (ax if isinstance(ax, tuple) else (ax,)):
-                used.add(a_)
+            used.update(spec_axes(ax))
         if any(a_ in used for a_ in axes):
             return P(*parts)          # already data-sharded (idempotent)
         # Prefer non-leading dims: dim0 of stacked layer params is the scan
@@ -155,6 +154,26 @@ def zero_pspecs(shape_tree, spec_tree, mesh: Mesh,
     return jax.tree_util.tree_map(fix, shape_tree, spec_tree)
 
 
+def spec_axes(ax) -> tuple:
+    """Normalize one PartitionSpec entry to a tuple of mesh axis names:
+    None/'' -> (), 'model' -> ('model',), ('pod', 'data') -> itself. The
+    single place spec entries are interpreted — shard_shape/shard_slice/
+    fit_pspecs/zero_pspecs/partition_kind all route through it."""
+    return ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+
+
+def partition_kind(spec: P) -> str:
+    """'col' when a param's output (last) dim is on 'model' (column-parallel
+    in-projection), 'row' when an inner/input dim is (row-parallel
+    out-projection), 'none' when replicated — how the per-shard CIM engines
+    decide to concat vs psum shard outputs (models/nn.ShardedPackedLayer)."""
+    parts = tuple(spec)
+    for d, ax in enumerate(parts):
+        if "model" in spec_axes(ax):
+            return "col" if d == len(parts) - 1 else "row"
+    return "none"
+
+
 def shard_shape(shape, spec: P, mesh_shape: Dict[str, int]):
     """Local (per-shard) shape of a tensor sharded by `spec` on a mesh of
     {axis_name: size}. The CIM packer plans per TP shard — a NeuRRAM 'core'
@@ -163,7 +182,7 @@ def shard_shape(shape, spec: P, mesh_shape: Dict[str, int]):
     parts = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
     out = []
     for dim, ax in zip(shape, parts):
-        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        axes = spec_axes(ax)
         n = 1
         for a in axes:
             n *= mesh_shape.get(a, 1)
@@ -189,7 +208,7 @@ def shard_slice(x, spec: P, mesh_shape: Dict[str, int],
     parts = tuple(spec) + (None,) * (x.ndim - len(tuple(spec)))
     out = x
     for d, (ax, loc) in enumerate(zip(parts, local)):
-        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        axes = spec_axes(ax)
         pos = 0
         for a in axes:             # row-major over the axes tuple
             pos = pos * mesh_shape.get(a, 1) + index.get(a, 0)
@@ -216,7 +235,7 @@ def fit_pspecs(shape_tree, spec_tree, mesh: Mesh):
             if ax is None:
                 out.append(None)
                 continue
-            axes = ax if isinstance(ax, tuple) else (ax,)
+            axes = spec_axes(ax)
             n = 1
             for a in axes:
                 n *= mesh.shape[a]

@@ -29,11 +29,15 @@ A third kernel executes SCHEDULED plans (core/mapping.schedule_tiles):
   * `cim_mvm_scheduled_pallas` — pass-major grid (i, p, s): pass p runs the
     tiles the chip fires simultaneously (one per core), successive passes
     model the serialized access to merged cores (seq_slot > 0). Tile order
-    is no longer output-block-contiguous, so a scalar-prefetched
-    `first_visit` array replaces the col-discontinuity init test; idle
-    padding slots carry zero denorm and accumulate nothing. Single-pass
-    scheduled plans lower to the same math as the packed kernel (the pass
-    dimension is size 1), so unmerged plans pay no scheduling cost.
+    is no longer output-block-contiguous, and Pallas TPU only preserves an
+    output block's VMEM across CONSECUTIVE grid visits — a later pass
+    revisiting an earlier pass's column block would read stale memory if
+    the kernel accumulated in place. So each slot writes its OWN partial
+    block (every output block is visited exactly once) and the wrapper
+    reduces the per-slot partials into column blocks in slot order after
+    the dispatch — which is where the chip accumulates row-split partial
+    sums too: digitally, outside the analog array. Idle padding slots
+    carry zero denorm and contribute exact zeros.
 
 The bit-serial input loop of the chip is algebraically folded in all three
 (sum_k 2^k p_k = x_int, exact for the linear datapath); per-phase
@@ -250,38 +254,35 @@ def cim_mvm_packed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
 
 # --------------------------------------------------------- scheduled executor
 
-def _cim_sched_kernel(first_ref, row_ref, col_ref, x_ref, gd_ref, invn_ref,
+def _cim_sched_kernel(row_ref, x_ref, gd_ref, invn_ref,
                       den_ref, vd_ref, seed_ref, out_ref, *, pass_len: int,
                       v_read: float, activation: str, n_max: int):
     """One grid step = one (batch block, pass, core slot) triple.
 
     Pass-major order models the chip's time-shared merged cores: the same
-    output block can be revisited in a LATER pass (a seq-slot row split), so
-    initialization is steered by the prefetched `first_visit` array instead
-    of the packed kernel's col-discontinuity test. Idle padding slots have
-    zero denorm (and first_visit 0): they accumulate exactly nothing.
+    output COLUMN block can be revisited in a LATER pass (a seq-slot row
+    split), and Pallas TPU only keeps an output block live in VMEM across
+    consecutive grid visits — so no in-kernel accumulation. Each slot
+    writes its own (bm, bn) partial block (visited exactly once); the
+    wrapper reduces the partials into column blocks after the dispatch.
+    Idle padding slots have zero denorm: their partial is exactly zero.
     """
     p, s = pl.program_id(1), pl.program_id(2)
     t = p * pass_len + s
-
-    @pl.when(first_ref[t] == 1)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
     q = jnp.dot(x_ref[...], gd_ref[0],
                 preferred_element_type=jnp.float32) * v_read * invn_ref[0]
     counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
                        ij=(pl.program_id(0), t))
-    out_ref[...] += counts * den_ref[0]
+    out_ref[...] = (counts * den_ref[0]).astype(out_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("row_block", "col_block", "first_visit", "n_passes",
+    static_argnames=("row_block", "col_block", "n_passes",
                      "activation", "n_max", "v_read", "bm", "interpret"))
 def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
                              v_decr_tiles, seed, *,
-                             row_block, col_block, first_visit, n_passes: int,
+                             row_block, col_block, n_passes: int,
                              activation: str = "none", n_max: int = 127,
                              v_read: float = 0.5, bm: int = 256,
                              interpret: bool = False):
@@ -289,9 +290,10 @@ def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
 
     x:(M,K) f32 integer-valued activations; gd_tiles:(P*S,bk,bn) pass-major
     slot tensors (idle slots zeroed); inv_norm_tiles/denorm_tiles:(P*S,1,bn);
-    v_decr_tiles:(P*S,); row_block/col_block/first_visit: static per-slot
-    tuples (scalar-prefetched). Returns (M_padded, n_col_blocks*bn) f32 —
-    caller slices to (M, C).
+    v_decr_tiles:(P*S,); row_block/col_block: static per-slot tuples
+    (row_block scalar-prefetched; col_block steers the post-dispatch
+    reduction of per-slot partials). Returns (M_padded, n_col_blocks*bn)
+    f32 — caller slices to (M, C).
     """
     TRACE_COUNTS["cim_mvm_scheduled"] += 1
     m, kdim = x.shape
@@ -310,39 +312,42 @@ def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
         if kdim < n_row_blocks * bk else xp
     mp = xp.shape[0]
 
-    first_idx = jnp.asarray(first_visit, jnp.int32)
     row_idx = jnp.asarray(row_block, jnp.int32)
-    col_idx = jnp.asarray(col_block, jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=1,
         grid=(mp // bm, n_passes, pass_len),
         in_specs=[
             pl.BlockSpec((bm, bk),
-                         lambda i, p, s, first, row, col:
-                         (i, row[p * pass_len + s])),
+                         lambda i, p, s, row: (i, row[p * pass_len + s])),
             pl.BlockSpec((1, bk, bn),
-                         lambda i, p, s, first, row, col:
-                         (p * pass_len + s, 0, 0)),
+                         lambda i, p, s, row: (p * pass_len + s, 0, 0)),
             pl.BlockSpec((1, 1, bn),
-                         lambda i, p, s, first, row, col:
-                         (p * pass_len + s, 0, 0)),
+                         lambda i, p, s, row: (p * pass_len + s, 0, 0)),
             pl.BlockSpec((1, 1, bn),
-                         lambda i, p, s, first, row, col:
-                         (p * pass_len + s, 0, 0)),
+                         lambda i, p, s, row: (p * pass_len + s, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
+        # one private partial block per slot: every output block is visited
+        # exactly once, so the Pallas TPU consecutive-revisit invariant
+        # holds trivially (no cross-pass in-kernel accumulation).
         out_specs=pl.BlockSpec((bm, bn),
-                               lambda i, p, s, first, row, col:
-                               (i, col[p * pass_len + s])),
+                               lambda i, p, s, row: (i, p * pass_len + s)),
     )
-    return pl.pallas_call(
+    parts = pl.pallas_call(
         functools.partial(_cim_sched_kernel, pass_len=pass_len,
                           v_read=v_read, activation=activation, n_max=n_max),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((mp, n_col_blocks * bn), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n_slots * bn), jnp.float32),
         interpret=interpret,
-    )(first_idx, row_idx, col_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
+    )(row_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
       v_decr_tiles.astype(jnp.float32),
       jnp.asarray(seed, jnp.int32).reshape(1))
+    # digital row-split partial-sum accumulation (the chip does this outside
+    # the analog array too), in slot order so the float add order matches
+    # the loop executor bitwise; idle slots contribute exact zeros.
+    y = jnp.zeros((mp, n_col_blocks * bn), jnp.float32)
+    for t, c in enumerate(col_block):
+        y = y.at[:, c * bn:(c + 1) * bn].add(parts[:, t * bn:(t + 1) * bn])
+    return y

@@ -81,7 +81,7 @@ def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
             packed.denorm_tiles, packed.v_decr_tiles,
             jnp.asarray(seed, jnp.int32),
             row_block=packed.row_block, col_block=packed.col_block,
-            first_visit=packed.first_visit, n_passes=packed.n_passes,
+            n_passes=packed.n_passes,
             activation=activation, n_max=n_max, v_read=v_read, bm=bm,
             interpret=interpret)
     else:

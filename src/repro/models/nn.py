@@ -265,18 +265,6 @@ def packed_linear(pcl, x, ccfg: CIMConfig, *, seed: int = 0):
                                   seed=seed)
 
 
-def _partition_kind(spec) -> str:
-    """'col' when the stacked param's output dim is on 'model' (column-
-    parallel in-projection), 'row' when an inner/input dim is (row-parallel
-    out-projection), 'none' when replicated."""
-    parts = tuple(spec)
-    for d, ax in enumerate(parts):
-        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
-        if "model" in axes:
-            return "col" if d == len(parts) - 1 else "row"
-    return "none"
-
-
 def arch_cim_config(arch_cfg) -> CIMConfig:
     """The CIMConfig a transformer arch serves its packed projections with
     (shared by deploy and the in-jit forward so they cannot drift)."""
@@ -315,7 +303,8 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
     if "layers" not in params or "wq" not in params["layers"]:
         raise ValueError("packed CIM serving currently covers dense "
                          "attention+MLP stacks (params['layers']['wq'])")
-    from ..distributed.sharding import param_pspecs, shard_slice, shard_shape
+    from ..distributed.sharding import (param_pspecs, partition_kind,
+                                        shard_slice, shard_shape)
     ccfg = arch_cim_config(arch_cfg)
     spec = spec or CoreSpec()
     mesh_shape = dict(mesh_shape) if mesh_shape else {"model": 1}
@@ -328,7 +317,7 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
     for n, w in stacked.items():
         try:
             shard_shape(w.shape, specs[n], {"model": n_sh})
-            kinds[n] = _partition_kind(specs[n]) if n_sh > 1 else "none"
+            kinds[n] = partition_kind(specs[n]) if n_sh > 1 else "none"
         except ValueError:      # not divisible: replicate (fit_pspecs rule)
             kinds[n] = "none"
 

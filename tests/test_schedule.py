@@ -21,9 +21,10 @@ except ImportError:  # offline container — deterministic shim
 import repro.core as core
 from repro.core.types import CIMConfig, CoreSpec, NonIdealityConfig
 from repro.core.conductance import weights_to_conductances
-from repro.core.mapping import (MatrixReq, Tile, ir_drop_max_cols,
-                                multicore_mvm, multicore_mvm_packed,
-                                pack_tiles, plan_layers, schedule_tiles)
+from repro.core.mapping import (MatrixReq, Tile, TileSchedule,
+                                ir_drop_max_cols, multicore_mvm,
+                                multicore_mvm_packed, pack_tiles,
+                                plan_layers, schedule_tiles)
 from repro.kernels.cim_mvm.ops import cim_mvm
 from repro.kernels.cim_mvm.kernel import TRACE_COUNTS
 
@@ -119,6 +120,21 @@ def test_scheduled_identity_matches_matmul():
                                atol=1e-3)
 
 
+def test_pack_tiles_rejects_non_permutation_schedule():
+    """A supplied schedule must cover the tiles exactly once: a duplicated
+    index has the right non-idle count but would pack one tile twice while
+    silently dropping another."""
+    tiles = [Tile("m", 0, 0, 64, 32, core=0),
+             Tile("m", 64, 0, 64, 32, core=1)]
+    w = jnp.ones((128, 32))
+    dup = TileSchedule(order=(0, 0), n_passes=1, pass_len=2)
+    with pytest.raises(ValueError, match="exactly once"):
+        pack_tiles(tiles, w, schedule=dup)
+    short = TileSchedule(order=(0,), n_passes=1, pass_len=1)
+    with pytest.raises(ValueError, match="exactly once"):
+        pack_tiles(tiles, w, schedule=short)
+
+
 def test_multi_pass_plan_rejects_tile_grid_kernel():
     plan = plan_layers([MatrixReq("m", 100, 500)], CoreSpec(n_cores=1))
     tiles = plan.tiles_for("m")
@@ -191,6 +207,21 @@ def test_compile_chip_stages_compose():
     # CompiledChip is a pytree: its packed tensors round-trip tree_map
     chip2 = jax.tree_util.tree_map(lambda a: a, chip)
     assert "a" in chip2 and chip2.plan is chip.plan
+    assert chip2.schedules == chip.schedules
+
+
+def test_compiled_chip_rides_through_jit():
+    """jit hashes the treedef, so the aux data (plan, schedules, configs)
+    must be hashable — a dict in aux used to raise TypeError here."""
+    from repro.core.cim import packed_forward
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (100, 40))
+    chip = core.compile_chip(jax.random.PRNGKey(1), {"a": w}, cfg,
+                             mode="ideal")
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 100))
+    f = jax.jit(lambda c, xx: packed_forward(c.layers["a"], xx, cfg))
+    y = f(chip, x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(f(chip, x)))
 
 
 # ------------------------------------------------- multi-shard TP serving

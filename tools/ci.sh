@@ -8,8 +8,11 @@
 # The fast tier is the pre-commit loop: kernels, planner/scheduler/packing,
 # engine, models, distributed — followed by a bench-smoke that runs
 # benchmarks/bench_mapping.py in quick mode and records the executor
-# timings to BENCH_mapping.json (the perf trajectory; it also enforces the
-# "scheduled dispatch no slower than packed on unmerged plans" contract).
+# timings to BENCH_mapping.json (the perf trajectory). The bench gate is
+# split by determinism: the one-trace-per-plan contract always fails the
+# run, while the "scheduled no slower than 2x packed on unmerged plans"
+# wall-clock ratio is a warning in the fast tier (shared CI machines make
+# timing gates flaky) and only enforced in the dedicated bench tier.
 # The slow tier adds the pulse-level write-verify simulator,
 # chip-in-the-loop fine-tuning and the end-to-end train/serve drivers
 # (several minutes of simulated physics).
@@ -20,7 +23,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 bench_smoke() {
   echo "== bench-smoke: mapping executors =="
-  python -m benchmarks.bench_mapping --quick --out BENCH_mapping.json
+  python -m benchmarks.bench_mapping --quick --out BENCH_mapping.json "$@"
 }
 
 tier="${1:-fast}"
@@ -30,6 +33,6 @@ case "$tier" in
     bench_smoke
     ;;
   full) exec python -m pytest -x -q ;;
-  bench) bench_smoke ;;
+  bench) bench_smoke --enforce-timing ;;
   *) echo "usage: tools/ci.sh [fast|full|bench]" >&2; exit 2 ;;
 esac
