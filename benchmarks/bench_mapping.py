@@ -5,7 +5,9 @@ per-tile kernels (`multicore_mvm`, one dynamic_slice matmul per tile),
 (b) the packed executor (`multicore_mvm_packed`, the whole plan as one
 pallas_call over a tile grid) and (c) the SCHEDULED executor (the same plan
 forced through the pass-major grid kernel that serializes merged cores),
-across three plan shapes plus a genuinely merged (multi-pass) plan. The
+across three plan shapes plus a genuinely merged (multi-pass) plan, plus a
+recurrent-stack entry: an rwkv6 layer's eight projections compiled as one
+chip and served packed, timed against the float matmuls they replace. The
 derived column reports how many kernel jit traces the executor cost — every
 packed path's headline is ONE trace/dispatch per plan regardless of tile
 count. That trace-count contract is deterministic and always enforced; the
@@ -124,6 +126,45 @@ def run(quick: bool = False):
     tr = TRACE_COUNTS["cim_mvm_scheduled"] - t0
     out.append((f"mapping_sched_{mname}_p{sched.n_passes}"
                 f"_t{sched.n_tiles}", round(us, 1), tr))
+
+    # recurrent projection stack (rwkv6 smoke geometry): one layer's whole
+    # time-mix + channel-mix projection set compiled as ONE chip
+    # (nn.deploy_recurrent_cim granularity) and served as one packed
+    # dispatch per projection — timed against the float matmuls the packed
+    # path replaces (the recurrent serving surface's perf trajectory)
+    from repro.core.cim import compile_chip, packed_forward
+    d, dff = 128, 256
+    kr = jax.random.PRNGKey(3)
+    rnames = ("wr", "wk", "wv", "wg", "wo", "ck", "cv", "cr")
+    rshapes = {"ck": (d, dff), "cv": (dff, d)}
+    ws = {n: 0.1 * jax.random.normal(jax.random.fold_in(kr, i),
+                                     rshapes.get(n, (d, d)))
+          for i, n in enumerate(rnames)}
+    chip = compile_chip(jax.random.PRNGKey(4), ws, cfg, CoreSpec(),
+                        "ideal", in_alpha=2.0)
+    xs = {n: jax.random.normal(jax.random.fold_in(kr, 100 + i),
+                               (16, ws[n].shape[0]))
+          for i, n in enumerate(rnames)}
+
+    # inputs/weights enter as traced jit arguments (like every other entry
+    # here) — a constant closure would let XLA fold the float baseline away
+    @jax.jit
+    def packed_stack(xs_):
+        return [packed_forward(chip.layers[n], xs_[n], cfg) for n in rnames]
+
+    @jax.jit
+    def float_stack(xs_, ws_):
+        return [xs_[n] @ ws_[n] for n in rnames]
+
+    t0 = TRACE_COUNTS["cim_mvm_packed"] + TRACE_COUNTS["cim_mvm_scheduled"]
+    us_packed = _time(lambda: packed_stack(xs), n_rep)
+    tr = (TRACE_COUNTS["cim_mvm_packed"]
+          + TRACE_COUNTS["cim_mvm_scheduled"]) - t0
+    us_float = _time(lambda: float_stack(xs, ws), n_rep)
+    out.append((f"recurrent_packed_rwkv6stack_m{len(rnames)}",
+                round(us_packed, 1), tr))
+    out.append((f"recurrent_float_rwkv6stack_m{len(rnames)}",
+                round(us_float, 1), 0))
     return out
 
 

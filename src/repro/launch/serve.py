@@ -9,14 +9,20 @@ once, then decoded token-by-token (greedy) with the cache updated in place
 mesh the cache shards (batch over data axes, head_dim over model) per
 distributed/sharding.py.
 
---cim routes every packed-servable projection (dense blocks, shared experts
-and MoE routed-expert stacks) through the chip compiler
-(core.cim.compile_chip): each layer's weights run the full plan ->
-schedule -> program -> calibrate -> pack pipeline once before serving, and
-every projection then executes as one scheduled Pallas dispatch per TP
-shard inside the prefill/decode jits — chip-sim inference as a serving
-scenario, not a per-layer demo. The TP width comes from the ACTUAL serving
-mesh (launch/mesh.serving_mesh_shape): one engine per 'model'-axis shard,
+--cim routes every packed-servable projection (dense blocks, shared experts,
+MoE routed-expert stacks, AND the recurrent stacks — rwkv6 time/channel
+mixes, mamba2 in/out + hybrid MLP + the one shared attention block) through
+the chip compiler (core.cim.compile_chip): each layer's weights run the full
+plan -> schedule -> program -> calibrate -> pack pipeline once before
+serving, and every projection then executes as one scheduled Pallas dispatch
+per TP shard inside the prefill/decode jits — chip-sim inference as a
+serving scenario, not a per-layer demo. Entry points come from the
+normalized table launch/steps.arch_serving — init/state/prefill/decode
+delegate to the family dispatch in models/transformer, and deploy_cim
+picks deploy_transformer_cim vs deploy_recurrent_cim — so `--cim --arch
+rwkv6-7b` / `zamba2-7b` serve instead of dying in the dense-only
+deploy. The TP width comes from the ACTUAL serving mesh
+(launch/mesh.serving_mesh_shape): one engine per 'model'-axis shard,
 partial outputs combined inside the jit. --cim-ir-drop > 0 turns on the
 IR-drop planning constraint (vertical column splits); --cim-cores shrinks
 the per-chip core budget to force merged-core (seq-slot scheduled) plans.
@@ -31,9 +37,8 @@ import jax.numpy as jnp
 
 from .. import configs
 from ..models import transformer as T
-from ..models import nn
 from ..data import lm_tokens
-from .steps import make_decode_step
+from .steps import arch_serving, make_decode_step
 
 
 def main(argv=None):
@@ -63,23 +68,28 @@ def main(argv=None):
         cfg = cfg.replace(cim_mode="packed", dtype=jnp.float32,
                           cim_ir_drop=args.cim_ir_drop)
     key = jax.random.PRNGKey(0)
-    params = T.init_params(key, cfg)
+    sv = arch_serving(cfg)
+    params = sv.init_params(key)
     if args.cim:
         from ..core.types import CoreSpec
         from .mesh import serving_mesh_shape
         mesh_shape = serving_mesh_shape()
         spec = CoreSpec(n_cores=args.cim_cores) if args.cim_cores else None
         t0 = time.time()
-        params = nn.deploy_transformer_cim(
-            jax.random.PRNGKey(7), params, cfg, mode=args.cim_mode,
-            mesh_shape=mesh_shape, spec=spec)
+        params = sv.deploy_cim(jax.random.PRNGKey(7), params,
+                               mode=args.cim_mode, mesh_shape=mesh_shape,
+                               spec=spec)
         n_packed = sum(1 for k in params["layers"] if k.endswith("_cim"))
+        n_shared = sum(1 for k in params.get("shared_attn", {})
+                       if k.endswith("_cim"))
+        shared = (f" + {n_shared} shared-attn projections"
+                  if n_shared else "")
         print(f"cim: compiled {n_packed} projection stacks "
-              f"x {cfg.n_layers} layers ({args.cim_mode}, "
+              f"x {cfg.n_layers} layers{shared} ({args.cim_mode}, "
               f"tp={mesh_shape.get('model', 1)}) "
               f"in {time.time() - t0:.1f}s")
     max_len = args.prompt_len + args.gen + (cfg.vis_patches or 0)
-    cache = T.init_cache(cfg, args.batch, max_len, dtype=cfg.dtype)
+    cache = sv.init_state(args.batch, max_len)
     prompts = lm_tokens(jax.random.PRNGKey(1), args.batch, args.prompt_len,
                         cfg.vocab)
     memory = None
@@ -92,7 +102,7 @@ def main(argv=None):
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
     t0 = time.time()
-    logits, cache = T.prefill(params, prompts, cache, cfg, memory=memory)
+    logits, cache = sv.prefill(params, cache, prompts, memory=memory)
     logits.block_until_ready()
     t_prefill = time.time() - t0
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)

@@ -1,14 +1,60 @@
-"""Jit-able train / prefill / decode step functions for the LM stack."""
+"""Jit-able train / prefill / decode step functions for the LM stack, plus
+the arch-dispatch table (`arch_serving`) the serving driver runs through:
+transformer vs rwkv6 vs mamba2 entry points with ONE normalized signature,
+so launch/serve.py never hardwires a family's init/prefill/decode/deploy."""
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ..models import transformer as T
 from ..train.optimizer import clip_grads
+
+
+class ArchServing(NamedTuple):
+    """Serving entry points for one architecture, with normalized
+    signatures (the model modules order params/state/tokens/cfg
+    differently — this table is the single place that absorbs it):
+
+      init_params(key)                      -> params
+      init_state(batch, max_len)            -> decode cache / recurrent state
+      prefill(params, state, tokens, memory=None)      -> (logits, state)
+      decode_step(params, state, tokens, memory=None)  -> (logits, state)
+      deploy_cim(key, params, **kw)         -> params with '_cim' engines
+
+    The transformer-vs-rwkv6-vs-mamba2 family dispatch for init/state/
+    prefill/decode lives in ONE place — models/transformer's init_params/
+    init_cache/prefill/decode_step branch on cfg.rwkv / cfg.ssm_state —
+    and this table delegates to it (no second dispatch table to drift).
+    deploy_cim is the genuinely family-specific leg and delegates to
+    nn.deploy_cim (deploy_transformer_cim for dense/MoE stacks,
+    deploy_recurrent_cim for rwkv6/mamba2 — nn.is_recurrent_arch is the
+    one predicate), so `serve --cim` works for every family instead of
+    dying in the dense-only deploy with an opaque error.
+    """
+    init_params: Callable
+    init_state: Callable
+    prefill: Callable
+    decode_step: Callable
+    deploy_cim: Callable
+
+
+def arch_serving(cfg: "T.ArchConfig") -> ArchServing:
+    """The serving entry-point table for `cfg` (see ArchServing)."""
+    from ..models import nn
+    return ArchServing(
+        init_params=lambda key: T.init_params(key, cfg),
+        init_state=lambda batch, max_len:
+            T.init_cache(cfg, batch, max_len, dtype=cfg.dtype),
+        prefill=lambda params, state, tokens, memory=None:
+            T.prefill(params, tokens, state, cfg, memory=memory),
+        decode_step=lambda params, state, tokens, memory=None:
+            T.decode_step(params, state, tokens, cfg, memory=memory),
+        deploy_cim=lambda key, params, **kw:
+            nn.deploy_cim(key, params, cfg, **kw))
 
 
 def adamw_init_f32(params):
@@ -94,6 +140,8 @@ def make_train_step(cfg: T.ArchConfig, lr: float = 1e-4, accum: int = 1,
 
 
 def make_prefill_step(cfg: T.ArchConfig):
+    sv = arch_serving(cfg)
+
     def prefill_step(params, cache, batch):
         memory = None
         if cfg.enc_layers > 0:
@@ -103,7 +151,7 @@ def make_prefill_step(cfg: T.ArchConfig):
             # vision prefix enters the cache first (stubbed frontend embeds)
             emb = batch["vis_embeds"]
             logits, cache = _prefix_embeds(params, cache, emb, cfg)
-        return T.prefill(params, tokens, cache, cfg, memory=memory)
+        return sv.prefill(params, cache, tokens, memory=memory)
     return prefill_step
 
 
@@ -131,8 +179,10 @@ def _prefix_embeds(params, cache, emb, cfg):
 
 
 def make_decode_step(cfg: T.ArchConfig):
+    sv = arch_serving(cfg)
+
     def decode_step(params, cache, batch):
         memory = batch.get("memory") if isinstance(batch, dict) else None
         tokens = batch["tokens"] if isinstance(batch, dict) else batch
-        return T.decode_step(params, cache, tokens, cfg, memory=memory)
+        return sv.decode_step(params, cache, tokens, memory=memory)
     return decode_step

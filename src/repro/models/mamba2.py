@@ -11,6 +11,11 @@ Zamba2 hybrid: a stack of Mamba-2 blocks with ONE shared full-attention +
 MLP block (single weight copy) invoked every `hybrid_attn_every` layers —
 weight sharing as in the Zamba papers. Decode state is O(1) per layer (the
 reason this arch runs the long_500k cell).
+
+With cfg.cim_mode == "packed" the in/out projections and the hybrid MLP
+serve from per-layer compiled CIM chips, and the shared attention block's
+dense projections from their own chip (models/nn.deploy_recurrent_cim);
+the h recurrence stays digital float.
 """
 from __future__ import annotations
 
@@ -43,14 +48,20 @@ def layer_params(key, cfg, dtype) -> Dict:
 
 def _ssd_chunk(p, x, cfg, chunk: int = 64, h0=None):
     """x: (B,T,d) normalized input -> ((B,T,d) mixer output, final state).
-    h0: optional (B,H,N,P) carried state (prefill)."""
+    h0: optional (B,H,N,P) carried state (prefill).
+
+    in_proj/out_proj route through `cim_linear` (via routed_linear): with
+    cim_mode == "packed" each executes as a packed Pallas dispatch on this
+    layer's compiled chip (nn.deploy_recurrent_cim). The h recurrence stays
+    digital float — state-dependent, nothing weight-stationary."""
+    from .transformer import routed_linear
     b, t, d = x.shape
     d_in = 2 * d
     n = cfg.ssm_state
     nh = d_in // cfg.ssm_head
     ph = cfg.ssm_head
 
-    zxbcdt = x @ p["in_proj"]
+    zxbcdt = routed_linear(x, p, "in_proj", cfg, seed=11)
     z, xin, bmat, cmat, dt = jnp.split(
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
@@ -110,7 +121,7 @@ def _ssd_chunk(p, x, cfg, chunk: int = 64, h0=None):
     y = y + p["dd"][None, None, :, None].astype(jnp.float32) \
         * xh.astype(jnp.float32)
     y = y.reshape(b, t, d_in).astype(x.dtype) * jax.nn.silu(z)
-    return y @ p["out_proj"], h_T
+    return routed_linear(y, p, "out_proj", cfg, seed=12), h_T
 
 
 def forward(params, x, cfg, positions):
@@ -118,7 +129,7 @@ def forward(params, x, cfg, positions):
     weight-shared attention block after each full group (deterministic group
     structure — no lax.cond — so dry-run cost extrapolation stays linear).
     Remainder layers (n_layers % every) run without a trailing attn block."""
-    from .transformer import rms_norm, dense_block, mlp
+    from .transformer import rms_norm, dense_block, routed_mlp
     every = cfg.hybrid_attn_every or cfg.n_layers
 
     from .transformer import _remat_policy
@@ -129,7 +140,7 @@ def forward(params, x, cfg, positions):
         y, _ = _ssd_chunk(p, rms_norm(x, p["ln"]), cfg)
         x = x + y
         h2 = rms_norm(x, p["ln2"])
-        return x + mlp(h2, p["w_i"], p["w_g"], p["w_o"], cfg), None
+        return x + routed_mlp(h2, p, cfg), None
 
     n_groups = cfg.n_layers // every
     n_rem = cfg.n_layers - n_groups * every
@@ -158,6 +169,16 @@ def forward(params, x, cfg, positions):
 
 # ------------------------------------------------------------- decode path
 
+def _dummy_kv(cfg, n_groups, b):
+    """Inert KV placeholders threaded through the group scan when the hybrid
+    shared-attn block is off. The ONE shared helper for prefill and
+    decode_step: their leading dim must equal the scanned group count (the
+    other scan inputs' leading dim) on BOTH paths, or prefill-built state
+    and decode-consumed state drift apart."""
+    z = jnp.zeros((n_groups, b, 1, 1, 1), cfg.dtype)
+    return z, z
+
+
 def init_state(cfg, batch, max_len, dtype):
     d = cfg.d_model
     d_in = 2 * d
@@ -178,7 +199,7 @@ def init_state(cfg, batch, max_len, dtype):
 def prefill(params, state, tokens, cfg):
     """Stateful chunked prefill: fills the SSM states and (for the hybrid)
     the shared-attn KV caches over the whole prompt; returns last logits."""
-    from .transformer import rms_norm, dense_block, mlp, _softcap, \
+    from .transformer import rms_norm, dense_block, routed_mlp, _softcap, \
         constrain_batch
     x = params["embed"][tokens].astype(cfg.dtype)        # (B,T,d)
     b, t, d = x.shape
@@ -193,7 +214,7 @@ def prefill(params, state, tokens, cfg):
         y, h_T = _ssd_chunk(p, rms_norm(x, p["ln"]), cfg, h0=h0)
         x = x + y
         h2 = rms_norm(x, p["ln2"])
-        return x + mlp(h2, p["w_i"], p["w_g"], p["w_o"], cfg), h_T
+        return x + routed_mlp(h2, p, cfg), h_T
 
     n_groups = cfg.n_layers // every
     n_rem = cfg.n_layers - n_groups * every
@@ -206,8 +227,7 @@ def prefill(params, state, tokens, cfg):
     if cfg.hybrid_attn_every > 0:
         ak, av = state["ak"], state["av"]
     else:
-        z = jnp.zeros((max(n_groups, 1), b, 1, 1, 1), cfg.dtype)
-        ak, av = z, z
+        ak, av = _dummy_kv(cfg, n_groups, b)
 
     def group_body(x, inp):
         pg, hg, ck, cv = inp
@@ -243,7 +263,8 @@ def prefill(params, state, tokens, cfg):
 def decode_step(params, state, tokens, cfg):
     """Group-structured decode mirroring forward(): `every` mamba steps then
     the shared attention block (with its own KV cache slice per group)."""
-    from .transformer import rms_norm, dense_block, mlp, _softcap
+    from .transformer import rms_norm, dense_block, routed_mlp, \
+        routed_linear, _softcap
     x = params["embed"][tokens[:, 0]].astype(cfg.dtype)   # (B,d)
     b, d = x.shape
     d_in = 2 * d
@@ -256,7 +277,7 @@ def decode_step(params, state, tokens, cfg):
     def mamba_step(x, inp):
         p, h0 = inp
         xn = rms_norm(x, p["ln"])
-        zxbcdt = xn @ p["in_proj"]
+        zxbcdt = routed_linear(xn, p, "in_proj", cfg, seed=11)
         z, xin, bm, cm, dt = jnp.split(
             zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], -1)
         dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
@@ -268,9 +289,9 @@ def decode_step(params, state, tokens, cfg):
         y = jnp.einsum("bn,bhnp->bhp", cm.astype(jnp.float32), h_new)
         y = y + p["dd"].astype(jnp.float32)[None, :, None] * xh
         y = y.reshape(b, d_in).astype(x.dtype) * jax.nn.silu(z)
-        x = x + y @ p["out_proj"]
+        x = x + routed_linear(y, p, "out_proj", cfg, seed=12)
         h2 = rms_norm(x, p["ln2"])
-        x = x + mlp(h2, p["w_i"], p["w_g"], p["w_o"], cfg)
+        x = x + routed_mlp(h2, p, cfg)
         return x, h_new
 
     n_groups = cfg.n_layers // every
@@ -298,8 +319,7 @@ def decode_step(params, state, tokens, cfg):
     if cfg.hybrid_attn_every > 0:
         ak, av = state["ak"], state["av"]
     else:
-        z = jnp.zeros((n_groups, b, 1, 1, 1), cfg.dtype)
-        ak, av = z, z
+        ak, av = _dummy_kv(cfg, n_groups, b)
     (x,), (h_all, nak, nav) = jax.lax.scan(
         group_body, (x,), (grouped, h_grouped, ak, av),
         unroll=n_groups if cfg.scan_unroll else 1)

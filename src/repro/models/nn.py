@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -124,12 +124,19 @@ class ChipLinear(NamedTuple):
     signed: bool
 
 
-def _augment_bias(w2, b, alpha, in_signed_max: float):
-    """Append bias rows: bias split over B rows driven at full-scale input."""
+def _augment_bias(w2, b, drive):
+    """Append bias rows: bias split over B rows driven at full-scale input.
+
+    `drive` is the constant input level the appended rows are fed at run
+    time — the SIGNED full-scale input, i.e. the PACT clip alpha
+    (`chip_linear` drives the rows at `cl.alpha` whether the data inputs
+    are signed or unsigned; signed inputs top out at +alpha, unsigned ones
+    never exceed it). Each row's conductance stays within the weight range
+    because n_rows scales with bmax / (drive * wmax)."""
     wmax = jnp.maximum(jnp.max(jnp.abs(w2)), 1e-12)
     bmax = jnp.max(jnp.abs(b))
-    n_rows = int(jnp.maximum(1, jnp.ceil(bmax / (alpha * wmax))))
-    rows = jnp.tile((b / (n_rows * alpha))[None, :], (n_rows, 1))
+    n_rows = int(jnp.maximum(1, jnp.ceil(bmax / (drive * wmax))))
+    rows = jnp.tile((b / (n_rows * drive))[None, :], (n_rows, 1))
     return jnp.concatenate([w2, rows], axis=0), n_rows
 
 
@@ -138,7 +145,7 @@ def deploy_linear(key, p, cfg: CIMConfig, alpha, x_cal=None,
     """Program one weight matrix (+bias rows) onto simulated RRAM."""
     w2 = p["w"] if p["w"].ndim == 2 else p["w"].reshape(-1, p["w"].shape[-1])
     alpha = jnp.asarray(alpha, jnp.float32)
-    w_aug, n_rows = _augment_bias(w2, p["b"], alpha, alpha)
+    w_aug, n_rows = _augment_bias(w2, p["b"], alpha)
     if x_cal is not None:
         ones = jnp.full((x_cal.shape[0], n_rows), alpha)
         x_cal = jnp.concatenate([x_cal.reshape(x_cal.shape[0], -1), ones], -1)
@@ -165,12 +172,18 @@ def chip_conv(cl: ChipLinear, x, cfg: CIMConfig, kh, kw_, stride=1,
 # --------------------------------------------- packed CIM serving (engine)
 
 # Projection matrices the packed serving path covers: dense-block + shared-
-# expert projections (2-D per layer) and routed-expert stacks (3-D per
-# layer, one chip per expert). Recurrent mixes (rwkv/mamba) keep the float
-# path (future work — ROADMAP).
+# expert projections (2-D per layer), routed-expert stacks (3-D per layer,
+# one chip per expert), and the recurrent stacks — rwkv6 time-mix/channel-mix
+# and mamba2 in/out + hybrid-MLP projections compile through
+# `deploy_recurrent_cim` (one chip per layer; the S/h state recurrences
+# themselves stay digital float — see DESIGN.md 'Serving surfaces').
 PACKED_PROJ_KEYS = ("wq", "wk", "wv", "wo", "w_g", "w_i", "w_o",
                     "sw_g", "sw_i", "sw_o")
 PACKED_EXPERT_KEYS = ("ew_g", "ew_i", "ew_o")
+# rwkv6: time-mix r/k/v/g/out projections + channel-mix k/v/receptance
+RWKV_PROJ_KEYS = ("wr", "wk", "wv", "wg", "wo", "ck", "cv", "cr")
+# mamba2: fused in/out projections + the hybrid block's SwiGLU MLP
+MAMBA_PROJ_KEYS = ("in_proj", "out_proj", "w_g", "w_i", "w_o")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -223,13 +236,16 @@ def sharded_packed_forward(spl: ShardedPackedLayer, x, ccfg: CIMConfig, *,
 
 def deploy_packed_stack(key, stacked_w: Dict[str, jax.Array],
                         ccfg: CIMConfig, *, mode: str = "ideal",
-                        in_alpha: float = 3.0,
+                        in_alpha: Union[float, Dict[str, float]] = 3.0,
                         spec: Optional[CoreSpec] = None) -> Dict[str, Any]:
     """Compile a scanned layer stack's weight matrices into packed chips.
 
     stacked_w: name -> (L, R, C) stacked weights (one scan step per layer),
     already sliced to the local TP shard if sharded (deploy_transformer_cim
     does this via distributed/sharding.shard_slice).
+    in_alpha: PACT input clip — scalar, or per-name dict for stacks whose
+    projections see differently-scaled activations (e.g. rwkv6's `cv`,
+    driven by a squared-relu, rides a wider clip than the rms-normed mixes).
     Each layer index gets its own `core.cim.compile_chip` run (one chip per
     transformer layer): all of that layer's matrices go through the full
     plan -> schedule -> program -> calibrate -> pack pipeline ONCE. The
@@ -274,6 +290,71 @@ def arch_cim_config(arch_cfg) -> CIMConfig:
             ir_drop_alpha=getattr(arch_cfg, "cim_ir_drop", 0.0)))
 
 
+def _deploy_sharded_stacks(key, stacked: Dict[str, jax.Array],
+                           ccfg: CIMConfig, *, mode: str,
+                           in_alpha: Union[float, Dict[str, float]],
+                           mesh_shape: Dict[str, int],
+                           spec: Optional[CoreSpec]
+                           ) -> Dict[str, "ShardedPackedLayer"]:
+    """Compile (L, R, C) weight stacks into per-TP-shard packed chip stacks.
+
+    The shared deploy core of `deploy_transformer_cim` and
+    `deploy_recurrent_cim`: ONE ENGINE PER 'model'-axis SHARD, each compiled
+    from that shard's local slice of every projection
+    (distributed/sharding.param_pspecs + shard_slice — a NeuRRAM 'core' is
+    an intra-shard unit). Returns name -> ShardedPackedLayer whose arrays
+    carry leading (L, n_shards) dims, ready for lax.scan over layers.
+
+    Projections whose sharded dim is not divisible by the axis size fall
+    back to a single replicated engine (fit_pspecs rule). Replicated
+    ('none') projections compile on their OWN chip stack: mixing them into
+    shard 0's chip would make the co-allocation planner produce shard-0
+    plans that diverge from the other shards' (different merges/schedules),
+    breaking the cross-shard stack.
+    """
+    from ..distributed.sharding import (param_pspecs, partition_kind,
+                                        shard_slice, shard_shape)
+    n_sh = max(int(mesh_shape.get("model", 1)), 1)
+    specs = param_pspecs({"layers": dict(stacked)})["layers"]
+    kinds = {}
+    for n, w in stacked.items():
+        try:
+            shard_shape(w.shape, specs[n], {"model": n_sh})
+            kinds[n] = partition_kind(specs[n]) if n_sh > 1 else "none"
+        except ValueError:      # not divisible: replicate (fit_pspecs rule)
+            kinds[n] = "none"
+
+    sharded_names = sorted(n for n in stacked if kinds[n] != "none")
+    none_names = sorted(n for n in stacked if kinds[n] == "none")
+    shard_layers = []
+    if sharded_names:
+        for s in range(n_sh):
+            local = {n: shard_slice(stacked[n], specs[n], {"model": n_sh},
+                                    {"model": s}) for n in sharded_names}
+            shard_layers.append(deploy_packed_stack(
+                jax.random.fold_in(key, s), local, ccfg, mode=mode,
+                in_alpha=in_alpha, spec=spec))
+    none_layers = {}
+    if none_names:
+        none_layers = deploy_packed_stack(
+            jax.random.fold_in(key, n_sh), {n: stacked[n]
+                                            for n in none_names},
+            ccfg, mode=mode, in_alpha=in_alpha, spec=spec)
+
+    out = {}
+    for n in stacked:
+        if kinds[n] == "none":
+            pcl = jax.tree_util.tree_map(lambda a: a[:, None],
+                                         none_layers[n])
+            out[n] = ShardedPackedLayer(pcl, "none", 1)
+        else:
+            pcl = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs, axis=1),
+                *[sl[n] for sl in shard_layers])
+            out[n] = ShardedPackedLayer(pcl, kinds[n], n_sh)
+    return out
+
+
 def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
                            in_alpha: float = 3.0,
                            mesh_shape: Optional[Dict[str, int]] = None,
@@ -301,59 +382,21 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
     spec: CoreSpec threaded through to every compile_chip call.
     """
     if "layers" not in params or "wq" not in params["layers"]:
-        raise ValueError("packed CIM serving currently covers dense "
-                         "attention+MLP stacks (params['layers']['wq'])")
-    from ..distributed.sharding import (param_pspecs, partition_kind,
-                                        shard_slice, shard_shape)
+        raise ValueError(
+            "deploy_transformer_cim covers dense attention+MLP stacks "
+            "(params['layers']['wq']); recurrent archs (rwkv6 / mamba2) "
+            "deploy through deploy_recurrent_cim")
     ccfg = arch_cim_config(arch_cfg)
     spec = spec or CoreSpec()
     mesh_shape = dict(mesh_shape) if mesh_shape else {"model": 1}
-    n_sh = max(int(mesh_shape.get("model", 1)), 1)
 
     stacked = {n: params["layers"][n] for n in PACKED_PROJ_KEYS
                if n in params["layers"]}
-    specs = param_pspecs({"layers": dict(stacked)})["layers"]
-    kinds = {}
-    for n, w in stacked.items():
-        try:
-            shard_shape(w.shape, specs[n], {"model": n_sh})
-            kinds[n] = partition_kind(specs[n]) if n_sh > 1 else "none"
-        except ValueError:      # not divisible: replicate (fit_pspecs rule)
-            kinds[n] = "none"
-
-    # one chip stack per TP shard. Replicated ('none') projections compile
-    # on their OWN chip stack: mixing them into shard 0's chip would make
-    # the co-allocation planner produce shard-0 plans that diverge from the
-    # other shards' (different merges/schedules), breaking the cross-shard
-    # stack below.
-    sharded_names = sorted(n for n in stacked if kinds[n] != "none")
-    none_names = sorted(n for n in stacked if kinds[n] == "none")
-    shard_layers = []
-    if sharded_names:
-        for s in range(n_sh):
-            local = {n: shard_slice(stacked[n], specs[n], {"model": n_sh},
-                                    {"model": s}) for n in sharded_names}
-            shard_layers.append(deploy_packed_stack(
-                jax.random.fold_in(key, s), local, ccfg, mode=mode,
-                in_alpha=in_alpha, spec=spec))
-    none_layers = {}
-    if none_names:
-        none_layers = deploy_packed_stack(
-            jax.random.fold_in(key, n_sh), {n: stacked[n]
-                                            for n in none_names},
-            ccfg, mode=mode, in_alpha=in_alpha, spec=spec)
-
     new_layers = dict(params["layers"])
-    for n in stacked:
-        if kinds[n] == "none":
-            pcl = jax.tree_util.tree_map(lambda a: a[:, None],
-                                         none_layers[n])
-            new_layers[n + "_cim"] = ShardedPackedLayer(pcl, "none", 1)
-        else:
-            pcl = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs, axis=1),
-                *[sl[n] for sl in shard_layers])
-            new_layers[n + "_cim"] = ShardedPackedLayer(pcl, kinds[n], n_sh)
+    for n, spl in _deploy_sharded_stacks(
+            key, stacked, ccfg, mode=mode, in_alpha=in_alpha,
+            mesh_shape=mesh_shape, spec=spec).items():
+        new_layers[n + "_cim"] = spl
 
     # routed-expert stacks: one chip per (layer, expert) — each expert's
     # (L, d, de) slice is itself a scanned layer stack, so reuse
@@ -375,4 +418,100 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
 
     out = dict(params)
     out["layers"] = new_layers
+    return out
+
+
+def is_recurrent_arch(arch_cfg) -> bool:
+    """THE family predicate for CIM deployment — the one place that decides
+    whether an arch's projections compile through deploy_recurrent_cim
+    (rwkv6 / mamba2 stacks) or deploy_transformer_cim (dense / MoE)."""
+    return bool(getattr(arch_cfg, "rwkv", False)) \
+        or getattr(arch_cfg, "ssm_state", 0) > 0
+
+
+def recurrent_proj_keys(arch_cfg) -> Tuple[str, ...]:
+    """The projection names a recurrent arch compiles onto CIM chips."""
+    if not is_recurrent_arch(arch_cfg):
+        raise ValueError(
+            f"{getattr(arch_cfg, 'name', arch_cfg)} is not a recurrent arch "
+            "(expected rwkv=True or ssm_state > 0)")
+    return RWKV_PROJ_KEYS if arch_cfg.rwkv else MAMBA_PROJ_KEYS
+
+
+def deploy_cim(key, params, arch_cfg, **kw):
+    """Family-dispatched CIM deploy: the single entry the serving driver
+    calls (launch/steps.ArchServing.deploy_cim)."""
+    if is_recurrent_arch(arch_cfg):
+        return deploy_recurrent_cim(key, params, arch_cfg, **kw)
+    return deploy_transformer_cim(key, params, arch_cfg, **kw)
+
+
+def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
+                         in_alpha: float = 3.0,
+                         mesh_shape: Optional[Dict[str, int]] = None,
+                         spec: Optional[CoreSpec] = None):
+    """Compile a recurrent stack's projections onto CIM chips — the paper's
+    versatility claim closed for serving: the same TNSA chips that serve
+    CNNs/transformers serve the RWKV-6 and Mamba-2 stacks.
+
+    Per layer, ONE chip carries every weight-stationary projection:
+
+      * rwkv6: time-mix `wr/wk/wv/wg/wo` + channel-mix `ck/cv/cr`. The
+        recurrent S update itself (diag(w) S + k v^T) stays digital float —
+        it is state-dependent, so nothing is weight-stationary to program
+        (the TNSA's BL->BL recurrent-MVM mode would stream S through the
+        array; simulated-chip serving keeps it in the digital domain).
+      * mamba2: fused `in_proj`/`out_proj` + the hybrid MLP `w_g/w_i/w_o`;
+        the h update (decay h + dt B x^T) stays digital float likewise.
+        The ONE weight-shared attention block of the zamba2 hybrid compiles
+        its dense projections (wq/wk/wv/wo + MLP) on its own chip, served
+        through the ordinary dense_block `cim_linear` routing.
+
+    Tensor parallelism mirrors deploy_transformer_cim: one engine per
+    'model'-axis shard via `_deploy_sharded_stacks`; prefill (chunked scan)
+    and O(1) decode both hit the packed Pallas kernel through the
+    `cim_linear` dispatch in models/rwkv6 and models/mamba2.
+
+    in_alpha is the scalar PACT clip for rms-norm-scale inputs; rwkv6's
+    `cv` (driven by the squared-relu of the `ck` output) gets `in_alpha**2`
+    via the per-name plumbing in `deploy_packed_stack`/`compile_chip`.
+    """
+    names = recurrent_proj_keys(arch_cfg)
+    stacked = {n: params["layers"][n] for n in names
+               if n in params["layers"]}
+    if not stacked:
+        raise ValueError("no recurrent projections found in "
+                         f"params['layers'] (expected some of {names})")
+    ccfg = arch_cim_config(arch_cfg)
+    spec = spec or CoreSpec()
+    mesh_shape = dict(mesh_shape) if mesh_shape else {"model": 1}
+
+    alphas: Dict[str, float] = {n: float(in_alpha) for n in stacked}
+    if "cv" in alphas:          # squared-relu input range (see docstring)
+        alphas["cv"] = float(in_alpha) ** 2
+
+    new_layers = dict(params["layers"])
+    for n, spl in _deploy_sharded_stacks(
+            key, stacked, ccfg, mode=mode, in_alpha=alphas,
+            mesh_shape=mesh_shape, spec=spec).items():
+        new_layers[n + "_cim"] = spl
+    out = dict(params)
+    out["layers"] = new_layers
+
+    # zamba2 hybrid: the ONE shared attention+MLP block (single weight
+    # copy, no layer stack) — compile as an L=1 stack, then strip the
+    # layer dim so dense_block's scan-free call sees unstacked engines
+    if getattr(arch_cfg, "hybrid_attn_every", 0) > 0 \
+            and "shared_attn" in params:
+        sa = params["shared_attn"]
+        sa_w = {n: sa[n][None] for n in PACKED_PROJ_KEYS if n in sa}
+        sa_cim = _deploy_sharded_stacks(
+            jax.random.fold_in(key, 104729), sa_w, ccfg, mode=mode,
+            in_alpha=in_alpha, mesh_shape=mesh_shape, spec=spec)
+        new_sa = dict(sa)
+        for n, spl in sa_cim.items():
+            new_sa[n + "_cim"] = ShardedPackedLayer(
+                jax.tree_util.tree_map(lambda a: a[0], spl.shards),
+                spl.partition, spl.n_shards)
+        out["shared_attn"] = new_sa
     return out

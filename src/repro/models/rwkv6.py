@@ -11,6 +11,10 @@ chunks) — the chunk matmuls hit the MXU instead of a length-T elementwise
 scan; decode carries S directly (O(1) state — why this arch runs long_500k).
 
 NeuRRAM note: the recurrent S update is the TNSA's BL->BL recurrent-MVM mode.
+With cfg.cim_mode == "packed" the time-mix/channel-mix projections serve
+from per-layer compiled CIM chips (models/nn.deploy_recurrent_cim) in both
+the chunked prefill and the O(1) decode path; the S update stays digital
+float (state-dependent — nothing weight-stationary to program).
 """
 from __future__ import annotations
 
@@ -57,17 +61,24 @@ def _token_shift(x, x_prev):
 def _time_mix_chunk(p, x, x_last, S0, cfg, chunk: int = 32):
     """Chunked linear-attention evaluation of the RWKV-6 recurrence.
 
-    x: (B,T,d). S0: (B,H,N,N) carry. Returns (y, S_T, x_T)."""
+    x: (B,T,d). S0: (B,H,N,N) carry. Returns (y, S_T, x_T).
+
+    The r/k/v/g/out projections route through `cim_linear` (via
+    routed_linear), so with cim_mode == "packed" each one executes as a
+    packed Pallas dispatch on this layer's compiled chip
+    (nn.deploy_recurrent_cim). The decay lora (rank-32) and the S update
+    itself stay digital float — nothing weight-stationary to program."""
+    from .transformer import routed_linear
     b, t, d = x.shape
     h = d // HEAD
     xs = _token_shift(x, x_last)
     mix = lambda i: x + (xs - x) * p["mu"][i]
-    r = (mix(0) @ p["wr"]).reshape(b, t, h, HEAD)
-    k = (mix(1) @ p["wk"]).reshape(b, t, h, HEAD)
-    v = (mix(2) @ p["wv"]).reshape(b, t, h, HEAD)
+    r = routed_linear(mix(0), p, "wr", cfg, seed=1).reshape(b, t, h, HEAD)
+    k = routed_linear(mix(1), p, "wk", cfg, seed=2).reshape(b, t, h, HEAD)
+    v = routed_linear(mix(2), p, "wv", cfg, seed=3).reshape(b, t, h, HEAD)
     wdec = p["w_base"] + jnp.tanh(mix(3) @ p["w_lora_a"]) @ p["w_lora_b"]
     w = jnp.exp(-jnp.exp(wdec.astype(jnp.float32))).reshape(b, t, h, HEAD)
-    g = jax.nn.silu(mix(4) @ p["wg"])
+    g = jax.nn.silu(routed_linear(mix(4), p, "wg", cfg, seed=4))
 
     # pad time to a chunk multiple; padded steps: w=1 (no decay), k=v=0
     chunk = min(chunk, t)
@@ -124,15 +135,17 @@ def _time_mix_chunk(p, x, x_last, S0, cfg, chunk: int = 32):
            jnp.swapaxes(vc, 0, 1), jnp.swapaxes(wc, 0, 1))
     S_T, ys = jax.lax.scan(chunk_step, S0.astype(jnp.float32), inp)
     y = jnp.swapaxes(ys, 0, 1).reshape(b, t_eff, d)[:, :t].astype(x.dtype)
-    return (y * g) @ p["wo"], S_T, x[:, -1]
+    return routed_linear(y * g, p, "wo", cfg, seed=5), S_T, x[:, -1]
 
 
-def _channel_mix(p, x, x_last):
+def _channel_mix(p, x, x_last, cfg):
+    from .transformer import routed_linear
     xs = _token_shift(x, x_last)
     xk = x + (xs - x) * p["cmu"][0]
     xr = x + (xs - x) * p["cmu"][1]
-    kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
-    return jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+    kk = jnp.square(jax.nn.relu(routed_linear(xk, p, "ck", cfg, seed=6)))
+    return jax.nn.sigmoid(routed_linear(xr, p, "cr", cfg, seed=7)) \
+        * routed_linear(kk, p, "cv", cfg, seed=8)
 
 
 def forward(layers_p, x, cfg):
@@ -150,7 +163,7 @@ def forward(layers_p, x, cfg):
         y, _, _ = _time_mix_chunk(p, rms_norm(x, p["ln1"]), x_last, S0, cfg)
         x = x + y
         x = x + _channel_mix(p, rms_norm(x, p["ln2"]),
-                             jnp.zeros((b, d), x.dtype))
+                             jnp.zeros((b, d), x.dtype), cfg)
         return x, None
 
     x, _ = jax.lax.scan(body, x, layers_p,
@@ -186,7 +199,7 @@ def prefill(params, state, tokens, cfg):
         y, S_T, x_tm_new = _time_mix_chunk(p, xn, x_tm, S0, cfg)
         x = x + y
         xn2 = rms_norm(x, p["ln2"])
-        y2 = _channel_mix(p, xn2, x_cm)
+        y2 = _channel_mix(p, xn2, x_cm, cfg)
         x = x + y2
         return x, (S_T, x_tm_new, xn2[:, -1])
 
@@ -203,8 +216,11 @@ def prefill(params, state, tokens, cfg):
 
 
 def decode_step(params, state, tokens, cfg):
-    """O(1)-state decode: tokens (B,1) -> (logits, new state)."""
-    from .transformer import rms_norm, _softcap
+    """O(1)-state decode: tokens (B,1) -> (logits, new state). Projections
+    route through `cim_linear` like the chunked prefill path, so packed CIM
+    serving covers decode with the SAME per-layer chips (one dispatch per
+    projection per step)."""
+    from .transformer import rms_norm, _softcap, routed_linear
     x = params["embed"][tokens[:, 0]].astype(cfg.dtype)      # (B, d)
     b, d = x.shape
     h = d // HEAD
@@ -213,23 +229,25 @@ def decode_step(params, state, tokens, cfg):
         p, S, x_tm, x_cm = inp
         xn = rms_norm(x, p["ln1"])
         mix = lambda i: xn + (x_tm - xn) * p["mu"][i]
-        r = (mix(0) @ p["wr"]).reshape(b, h, HEAD)
-        k = (mix(1) @ p["wk"]).reshape(b, h, HEAD)
-        v = (mix(2) @ p["wv"]).reshape(b, h, HEAD)
+        r = routed_linear(mix(0), p, "wr", cfg, seed=1).reshape(b, h, HEAD)
+        k = routed_linear(mix(1), p, "wk", cfg, seed=2).reshape(b, h, HEAD)
+        v = routed_linear(mix(2), p, "wv", cfg, seed=3).reshape(b, h, HEAD)
         wdec = p["w_base"] + jnp.tanh(mix(3) @ p["w_lora_a"]) @ p["w_lora_b"]
         w = jnp.exp(-jnp.exp(wdec.astype(jnp.float32))).reshape(b, h, HEAD)
-        g = jax.nn.silu(mix(4) @ p["wg"])
+        g = jax.nn.silu(routed_linear(mix(4), p, "wg", cfg, seed=4))
         kv = jnp.einsum("bhn,bhm->bhnm", k, v)
         out = jnp.einsum("bhn,bhnm->bhm", r,
                          S + p["u"].astype(jnp.float32)[None, :, :, None] * kv)
         S_new = S * w[..., None] + kv
-        y = (out.reshape(b, d).astype(x.dtype) * g) @ p["wo"]
+        y = routed_linear(out.reshape(b, d).astype(x.dtype) * g, p, "wo",
+                          cfg, seed=5)
         x = x + y
         xn2 = rms_norm(x, p["ln2"])
         xk = xn2 + (x_cm - xn2) * p["cmu"][0]
         xr = xn2 + (x_cm - xn2) * p["cmu"][1]
-        kk = jnp.square(jax.nn.relu(xk @ p["ck"]))
-        x = x + jax.nn.sigmoid(xr @ p["cr"]) * (kk @ p["cv"])
+        kk = jnp.square(jax.nn.relu(routed_linear(xk, p, "ck", cfg, seed=6)))
+        x = x + jax.nn.sigmoid(routed_linear(xr, p, "cr", cfg, seed=7)) \
+            * routed_linear(kk, p, "cv", cfg, seed=8)
         return x, (S_new, xn, xn2)
 
     x, (S_new, x_tm_new, x_cm_new) = jax.lax.scan(

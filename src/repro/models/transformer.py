@@ -148,6 +148,15 @@ def cim_linear(x, w, cfg: ArchConfig, *, seed: int = 0, packed=None):
     raise ValueError(cfg.cim_mode)
 
 
+def routed_linear(x, p, name: str, cfg: ArchConfig, *, seed: int = 0):
+    """`cim_linear` over `p[name]`, picking up the packed deploy entry
+    `p['<name>_cim']` (nn.deploy_transformer_cim / deploy_recurrent_cim)
+    when one is present — the routing idiom every model family shares
+    (dense blocks, rwkv6 mixes, mamba2 in/out projections)."""
+    return cim_linear(x, p[name], cfg, seed=seed,
+                      packed=p.get(name + "_cim"))
+
+
 # ------------------------------------------------------------------- layers
 
 def constrain_batch(x, cfg: "ArchConfig"):
@@ -278,6 +287,14 @@ def mlp(x, wi, wg, wo, cfg: ArchConfig, seed=0, packed=(None, None, None)):
     return cim_linear(h, wo, cfg, seed=seed + 2, packed=po)
 
 
+def routed_mlp(x, p, cfg: ArchConfig, *, seed: int = 5):
+    """`mlp` routed by param name (`w_i/w_g/w_o` + optional `_cim` deploy
+    entries) — shared by dense blocks and the mamba2 hybrid MLP."""
+    return mlp(x, p["w_i"], p["w_g"], p["w_o"], cfg, seed=seed,
+               packed=(p.get("w_i_cim"), p.get("w_g_cim"),
+                       p.get("w_o_cim")))
+
+
 # ------------------------------------------------------------ param init
 
 def _dense_layer_params(key, cfg: ArchConfig, dtype, xattn: bool = False):
@@ -384,12 +401,9 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
     b, s, d = x.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     h = rms_norm(x, p["ln1"])
-    q = cim_linear(h, p["wq"], cfg, seed=1,
-                   packed=p.get("wq_cim")).reshape(b, s, nh, hd)
-    k = cim_linear(h, p["wk"], cfg, seed=2,
-                   packed=p.get("wk_cim")).reshape(b, s, nkv, hd)
-    v = cim_linear(h, p["wv"], cfg, seed=3,
-                   packed=p.get("wv_cim")).reshape(b, s, nkv, hd)
+    q = routed_linear(h, p, "wq", cfg, seed=1).reshape(b, s, nh, hd)
+    k = routed_linear(h, p, "wk", cfg, seed=2).reshape(b, s, nkv, hd)
+    v = routed_linear(h, p, "wv", cfg, seed=3).reshape(b, s, nkv, hd)
     if cfg.qkv_bias:
         q = q + p["bq"].reshape(nh, hd)
         k = k + p["bk"].reshape(nkv, hd)
@@ -421,8 +435,7 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
         kv_pos = positions
         attn = _attention_window(q, k, v, positions, kv_pos, window, cfg,
                                  causal=True)
-    x = x + cim_linear(attn.reshape(b, s, nh * hd), p["wo"], cfg, seed=4,
-                       packed=p.get("wo_cim"))
+    x = x + routed_linear(attn.reshape(b, s, nh * hd), p, "wo", cfg, seed=4)
 
     if memory is not None:                       # cross-attention (enc-dec)
         x = x + _cross_attn(p, x, memory, cfg)
@@ -440,9 +453,7 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
         else:
             y = moe_mod.moe_ffn(p, h2, cfg)      # dense/MoE can interleave
     else:
-        y = mlp(h2, p["w_i"], p["w_g"], p["w_o"], cfg, seed=5,
-                packed=(p.get("w_i_cim"), p.get("w_g_cim"),
-                        p.get("w_o_cim")))
+        y = routed_mlp(h2, p, cfg, seed=5)
     return x + y, new_cache
 
 

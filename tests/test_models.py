@@ -120,3 +120,38 @@ def test_bias_rows_encoding():
     # bias actually represented: zero input -> output ~= bias
     y0 = nn.chip_linear(cl, jnp.zeros((4, 32)), cfg)
     assert np.corrcoef(np.asarray(y0[0]), np.asarray(p["b"]))[0, 1] > 0.9
+
+
+def test_bias_rows_reconstruction_signed_unsigned():
+    """_augment_bias: driving the appended rows at the PACT clip alpha
+    reconstructs x @ w + b in float for both signed and unsigned inputs —
+    the signed full-scale assumption the (removed) dead parameter hid. A
+    bias much larger than alpha * wmax must split over multiple rows so
+    each row's weight stays within the programmed range."""
+    key = jax.random.PRNGKey(0)
+    w = 0.1 * jax.random.normal(key, (32, 8))
+    b = 3.0 * jax.random.normal(jax.random.fold_in(key, 1), (8,))
+    alpha = 2.0
+    w_aug, n_rows = nn._augment_bias(w, b, alpha)
+    assert n_rows > 1                       # bmax >> alpha * wmax
+    wmax = float(jnp.max(jnp.abs(w)))
+    assert float(jnp.max(jnp.abs(w_aug[32:]))) <= wmax * (1 + 1e-6)
+    for signed in (True, False):
+        x = jax.random.normal(jax.random.fold_in(key, 2), (16, 32))
+        if not signed:
+            x = jnp.abs(x)
+        x_aug = jnp.concatenate([x, jnp.full((16, n_rows), alpha)], -1)
+        np.testing.assert_allclose(np.asarray(x_aug @ w_aug),
+                                   np.asarray(x @ w + b),
+                                   rtol=1e-5, atol=1e-5)
+        # end-to-end through the chip path (ideal programming)
+        cfg = CIMConfig(in_bits=8, out_bits=10)
+        cl = nn.deploy_linear(jax.random.fold_in(key, 3),
+                              {"w": w, "b": b}, cfg, alpha=alpha, x_cal=x,
+                              signed=signed, mode="ideal")
+        assert cl.bias_rows == n_rows and cl.signed == signed
+        y = nn.chip_linear(cl, x, cfg)
+        yt = jnp.clip(x, -alpha, alpha) @ w + b
+        corr = np.corrcoef(np.asarray(y).ravel(),
+                           np.asarray(yt).ravel())[0, 1]
+        assert corr > 0.97

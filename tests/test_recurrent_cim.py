@@ -1,0 +1,198 @@
+"""Recurrent-model packed CIM serving: rwkv6 / mamba2 projections compiled
+through the chip-compiler pipeline (nn.deploy_recurrent_cim) must (a) match
+the per-tile loop executor bitwise on exact modes — the same equivalence
+contract tests/test_packed.py enforces for dense plans — and (b) preserve
+state continuity: chunked prefill + N decode steps equals one-shot prefill
+of the full sequence with cim_mode == "packed"."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+import repro.core as core
+import repro.models.transformer as T
+import repro.models.nn as nn
+from repro.core.types import CIMConfig, CoreSpec
+from repro.kernels.cim_mvm.ops import cim_mvm
+
+
+def _rwkv_weights(key, d=320, dff=768):
+    """rwkv6-shaped projection set, sized to force row AND column splits
+    (256x256 cores): wr/wk/wv/wg/wo d x d, ck d x dff, cv dff x d, cr d x d."""
+    ks = iter(jax.random.split(key, 8))
+    s = lambda r, c: 0.1 * jax.random.normal(next(ks), (r, c))
+    return {"wr": s(d, d), "wk": s(d, d), "wv": s(d, d), "wg": s(d, d),
+            "wo": s(d, d), "ck": s(d, dff), "cv": s(dff, d), "cr": s(d, d)}
+
+
+def _mamba_weights(key, d=128):
+    """mamba2-shaped set (zamba2 smoke geometry): fused in_proj, out_proj
+    and the hybrid MLP."""
+    d_in, n, nh, dff = 2 * d, 16, 2 * d // 32, 2 * d
+    ks = iter(jax.random.split(key, 5))
+    s = lambda r, c: 0.1 * jax.random.normal(next(ks), (r, c))
+    return {"in_proj": s(d, 2 * d_in + 2 * n + nh), "out_proj": s(d_in, d),
+            "w_g": s(d, dff), "w_i": s(d, dff), "w_o": s(dff, d)}
+
+
+@pytest.mark.parametrize("family", ["rwkv6", "mamba2"])
+def test_recurrent_projections_match_loop_bitwise(family):
+    """Exact mode: every recurrent projection compiled on a shared per-layer
+    chip reproduces the per-tile loop executor's ADC counts bitwise, and the
+    served (de-normalized) output matches the per-matrix chip-path loop."""
+    weights = (_rwkv_weights(jax.random.PRNGKey(0)) if family == "rwkv6"
+               else _mamba_weights(jax.random.PRNGKey(1)))
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    chip = core.compile_chip(jax.random.PRNGKey(2), weights, cfg,
+                             CoreSpec(), "ideal", in_alpha=2.0)
+    for i_name, (name, w) in enumerate(sorted(weights.items())):
+        pcl = chip.layers[name]
+        layer = pcl.layer
+        tiles = [t for t in chip.plan.tiles_for(name) if t.replica == 0]
+        sched = chip.schedules[name]
+        # the chip's OWN per-tile calibrated v_decr, recovered slot -> tile
+        # through the schedule order pack_chip used
+        vds = np.ones(len(tiles), np.float32)
+        for slot, idx in enumerate(sched.order):
+            if idx is not None:
+                vds[idx] = float(pcl.packed.v_decr_tiles[slot])
+        vds = jnp.asarray(vds)
+        vd_of = {(t.row0, t.col0): vds[i] for i, t in enumerate(tiles)}
+
+        x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(3),
+                                                 i_name), (5, w.shape[0]))
+        x_int, scale = core.quantize_to_int(x, layer.in_alpha, cfg.in_bits,
+                                            signed=True)
+        # (a) raw ADC counts, fold disabled: bitwise vs the per-tile loop
+        # (counts are integer-valued f32 — digital accumulation is exact)
+        nofold = core.pack_tiles(tiles, layer.g_pos - layer.g_neg,
+                                 gsum=layer.g_pos + layer.g_neg,
+                                 v_decr=vds, schedule=sched)
+        y_packed = core.multicore_mvm_packed(x_int, nofold, cfg)
+
+        def count_fn(xt, _wt, t):
+            gp = jax.lax.dynamic_slice(layer.g_pos, (t.row0, t.col0),
+                                       (t.rows, t.cols))
+            gn = jax.lax.dynamic_slice(layer.g_neg, (t.row0, t.col0),
+                                       (t.rows, t.cols))
+            return cim_mvm(xt, gp, gn, vd_of[(t.row0, t.col0)], cfg)
+
+        y_loop = core.multicore_mvm(x_int, layer.g_pos - layer.g_neg,
+                                    tiles, count_fn)
+        np.testing.assert_array_equal(np.asarray(y_packed),
+                                      np.asarray(y_loop),
+                                      err_msg=f"{family}:{name}")
+
+        # (b) the actual serving path (fold_norm de-normalization) vs the
+        # per-matrix chip-path loop with per-core de-normalization
+        y_serve = core.packed_forward(pcl, x, cfg)
+
+        def denorm_fn(xt, _wt, t):
+            gp = jax.lax.dynamic_slice(layer.g_pos, (t.row0, t.col0),
+                                       (t.rows, t.cols))
+            gn = jax.lax.dynamic_slice(layer.g_neg, (t.row0, t.col0),
+                                       (t.rows, t.cols))
+            vd_t = vd_of[(t.row0, t.col0)]
+            counts = cim_mvm(xt, gp, gn, vd_t, cfg)
+            norm_t = jnp.sum(gp + gn, axis=0)
+            return counts * norm_t[None, :] * vd_t
+
+        acc = core.multicore_mvm(x_int, layer.g_pos - layer.g_neg, tiles,
+                                 denorm_fn)
+        y_ref = acc * layer.w_max * scale / (cfg.v_read * cfg.device.g_max)
+        np.testing.assert_allclose(np.asarray(y_serve), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{family}:{name}")
+        # and it tracks the ideal clipped matmul
+        yt = jnp.clip(x, -2, 2) @ w
+        corr = np.corrcoef(np.asarray(y_serve).ravel(),
+                           np.asarray(yt).ravel())[0, 1]
+        assert corr > 0.97, f"{family}:{name} corr={corr}"
+
+
+def test_recurrent_plan_actually_splits():
+    """The bitwise test above must exercise non-trivial plans: the oversized
+    rwkv6-style projections split across row and column tiles."""
+    weights = _rwkv_weights(jax.random.PRNGKey(0))
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    plan = core.plan_chip([core.MatrixReq(n, int(w.shape[0]),
+                                          int(w.shape[1]))
+                           for n, w in weights.items()], cfg, CoreSpec())
+    assert len([t for t in plan.tiles_for("ck") if t.replica == 0]) >= 2
+    assert len([t for t in plan.tiles_for("cv") if t.replica == 0]) >= 2
+
+
+# --------------------------------------------------- deploy + continuity
+
+def _continuity(arch, t_prompt=20, n_decode=4):
+    """Chunked prefill + N decode steps vs one-shot prefill of the full
+    sequence, with every projection served from the packed chips."""
+    cfg = configs.get(arch, smoke=True).replace(dtype=jnp.float32,
+                                                cim_mode="packed")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    params = nn.deploy_recurrent_cim(jax.random.PRNGKey(7), params, cfg,
+                                     mode="ideal")
+    tot = t_prompt + n_decode
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, tot), 0, cfg.vocab)
+    state = T.init_cache(cfg, 2, tot + 8)
+    lg, state = T.prefill(params, toks[:, :t_prompt], state, cfg)
+    for t in range(t_prompt, tot):
+        lg, state = T.decode_step(params, state, toks[:, t:t + 1], cfg)
+    full = T.init_cache(cfg, 2, tot + 8)
+    lg_full, _ = T.prefill(params, toks, full, cfg)
+    assert np.isfinite(np.asarray(lg)).all()
+    rel = float(jnp.abs(lg - lg_full).max() / (jnp.abs(lg_full).max()
+                                               + 1e-9))
+    assert rel < 1e-3, f"{arch} packed continuity rel={rel}"
+    return params
+
+
+@pytest.mark.slow
+def test_rwkv6_packed_state_continuity():
+    params = _continuity("rwkv6-7b")
+    assert sorted(k for k in params["layers"] if k.endswith("_cim")) == \
+        sorted(n + "_cim" for n in nn.RWKV_PROJ_KEYS)
+
+
+@pytest.mark.slow
+def test_mamba2_packed_state_continuity():
+    params = _continuity("zamba2-7b")
+    assert sorted(k for k in params["layers"] if k.endswith("_cim")) == \
+        sorted(n + "_cim" for n in nn.MAMBA_PROJ_KEYS)
+    # the ONE shared attention block compiled its own chip
+    assert any(k.endswith("_cim") for k in params["shared_attn"])
+
+
+def test_mamba2_hybrid_off_prefill_decode_continuity():
+    """hybrid_attn_every == 0: the dummy-KV placeholders threaded through
+    the group scan must agree between prefill and decode_step (_dummy_kv
+    regression — the two paths used to build them with different leading
+    dims)."""
+    cfg = configs.get("zamba2-7b", smoke=True).replace(
+        dtype=jnp.float32, hybrid_attn_every=0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    assert "shared_attn" not in params
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    state = T.init_cache(cfg, 2, 24)
+    assert "ak" not in state
+    lg, state = T.prefill(params, toks[:, :12], state, cfg)
+    for t in range(12, 16):
+        lg, state = T.decode_step(params, state, toks[:, t:t + 1], cfg)
+    full = T.init_cache(cfg, 2, 24)
+    lg_full, _ = T.prefill(params, toks, full, cfg)
+    rel = float(jnp.abs(lg - lg_full).max() / (jnp.abs(lg_full).max()
+                                               + 1e-9))
+    assert rel < 1e-3
+
+
+def test_deploy_recurrent_rejects_dense_arch():
+    """A dense arch pointed at the recurrent deploy fails with a clear
+    message (and vice versa — see deploy_transformer_cim)."""
+    cfg = configs.get("gemma2-9b", smoke=True)
+    with pytest.raises(ValueError, match="not a recurrent arch"):
+        nn.recurrent_proj_keys(cfg)
+    rcfg = configs.get("rwkv6-7b", smoke=True).replace(dtype=jnp.float32)
+    params = T.init_params(jax.random.PRNGKey(0), rcfg)
+    with pytest.raises(ValueError, match="deploy_recurrent_cim"):
+        nn.deploy_transformer_cim(jax.random.PRNGKey(1), params, rcfg)

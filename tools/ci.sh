@@ -8,11 +8,14 @@
 # The fast tier is the pre-commit loop: kernels, planner/scheduler/packing,
 # engine, models, distributed — followed by a bench-smoke that runs
 # benchmarks/bench_mapping.py in quick mode and records the executor
-# timings to BENCH_mapping.json (the perf trajectory). The bench gate is
-# split by determinism: the one-trace-per-plan contract always fails the
-# run, while the "scheduled no slower than 2x packed on unmerged plans"
-# wall-clock ratio is a warning in the fast tier (shared CI machines make
-# timing gates flaky) and only enforced in the dedicated bench tier.
+# timings to BENCH_mapping.json (the perf trajectory), and a serve-smoke
+# that end-to-end serves the recurrent archs (rwkv6 + zamba2) through the
+# packed CIM path on tiny configs (the arch-dispatch + deploy_recurrent_cim
+# regression guard). The bench gate is split by determinism: the
+# one-trace-per-plan contract always fails the run, while the "scheduled no
+# slower than 2x packed on unmerged plans" wall-clock ratio is a warning in
+# the fast tier (shared CI machines make timing gates flaky) and only
+# enforced in the dedicated bench tier.
 # The slow tier adds the pulse-level write-verify simulator,
 # chip-in-the-loop fine-tuning and the end-to-end train/serve drivers
 # (several minutes of simulated physics).
@@ -26,11 +29,20 @@ bench_smoke() {
   python -m benchmarks.bench_mapping --quick --out BENCH_mapping.json "$@"
 }
 
+serve_smoke() {
+  echo "== serve-smoke: recurrent CIM serving =="
+  python -m repro.launch.serve --smoke --cim --arch rwkv6-7b \
+    --batch 2 --prompt-len 8 --gen 3
+  python -m repro.launch.serve --smoke --cim --arch zamba2-7b \
+    --batch 2 --prompt-len 8 --gen 3
+}
+
 tier="${1:-fast}"
 case "$tier" in
   fast)
     python -m pytest -q -m "not slow"
     bench_smoke
+    serve_smoke
     ;;
   full) exec python -m pytest -x -q ;;
   bench) bench_smoke --enforce-timing ;;
