@@ -28,22 +28,16 @@ def run():
             ("fig1e_cnn_chip_gap", None, round(soft - chip, 4))]
 
     # RBM image recovery (L2 error reduction)
-    PIX, NV, NH = 128, 138, 32
+    PIX, NH = 128, 32
     v = binary_patterns(jax.random.PRNGKey(5), 384, d=PIX, rank=4)
-    rp = rbm.init(jax.random.PRNGKey(6), n_vis=NV, n_hid=NH)
-    import jax as _jax
-    upd = _jax.jit(lambda k, p, vb: rbm.cd1_update(k, p, vb, lr=0.1,
-                                                   noise_frac=0.05))
-    for i in range(800):
-        k = jax.random.fold_in(jax.random.PRNGKey(7), i)
-        idx = jax.random.randint(k, (64,), 0, 384)
-        rp = upd(jax.random.fold_in(k, 1), rp, v[idx])
+    rp = rbm.train_cd1(jax.random.PRNGKey(7), v, NH, steps=800)
     vt = binary_patterns(jax.random.PRNGKey(8), 64, d=PIX, rank=4)
     v_c, mask = corrupt_flip(jax.random.PRNGKey(9), vt, 0.2, pixels=PIX)
     cfg2 = CIMConfig(in_bits=2, out_bits=8)
-    chiprbm = rbm.deploy(jax.random.PRNGKey(10), rp, cfg2, v[:64])
-    rec = rbm.chip_gibbs_recover(jax.random.PRNGKey(11), chiprbm, cfg2, v_c,
-                                 mask, n_cycles=10)
+    from repro.models import nn as _nn
+    chiprbm = _nn.deploy_rbm_cim(jax.random.PRNGKey(10), rp, cfg2, v[:64])
+    rec = rbm.chip_gibbs_recover(jax.random.PRNGKey(11), chiprbm, v_c,
+                                 mask, n_cycles=10)[-1]
     e0 = float(rbm.l2_error(v_c[:, :PIX], vt[:, :PIX]))
     e1 = float(rbm.l2_error(rec[:, :PIX], vt[:, :PIX]))
     rows.append(("fig1e_rbm_l2_err_reduction_pct", None,

@@ -7,7 +7,10 @@ pallas_call over a tile grid) and (c) the SCHEDULED executor (the same plan
 forced through the pass-major grid kernel that serializes merged cores),
 across three plan shapes plus a genuinely merged (multi-pass) plan, plus a
 recurrent-stack entry: an rwkv6 layer's eight projections compiled as one
-chip and served packed, timed against the float matmuls they replace. The
+chip and served packed, timed against the float matmuls they replace — and
+a bidirectional entry: the RBM's jit'd packed Gibbs scan (one compiled
+chip, alternating fwd + transpose-direction dispatches) timed against the
+per-matrix compat loop it replaced (gibbs_packed_* vs gibbs_compat_*). The
 derived column reports how many kernel jit traces the executor cost — every
 packed path's headline is ONE trace/dispatch per plan regardless of tile
 count. That trace-count contract is deterministic and always enforced; the
@@ -165,6 +168,66 @@ def run(quick: bool = False):
                 round(us_packed, 1), tr))
     out.append((f"recurrent_float_rwkv6stack_m{len(rnames)}",
                 round(us_float, 1), 0))
+
+    # bidirectional RBM Gibbs serving (paper Fig. 4e-g): the jit'd packed
+    # scan loop — ONE compiled chip, alternating fwd + transpose-direction
+    # dispatches — against the retired per-matrix compat loop
+    # (cim_api.program/forward with a hand-built transposed CIMLayer) it
+    # replaced. Benchmarks are the one sanctioned place that still drives
+    # the compat wrappers as a baseline (tests/test_bidirectional.py
+    # audits src/repro itself).
+    from repro.core import cim as cim_api
+    from repro.core.cim import CIMLayer
+    from repro.core.calibration import calibrate_layer
+    from repro.core.quant import quantize_to_int
+    from repro.models import nn as NN, rbm as RBM
+    from repro.data import binary_patterns, corrupt_flip
+    n_vis, n_hid, pix, cycles = 138, 32, 128, 5
+    params = RBM.init(jax.random.PRNGKey(5), n_vis=n_vis, n_hid=n_hid)
+    v = binary_patterns(jax.random.PRNGKey(6), 64, d=pix, rank=4)
+    v_c, mask = corrupt_flip(jax.random.PRNGKey(7), v, 0.2, pixels=pix)
+    rcfg = CIMConfig(in_bits=2, out_bits=8)
+    crbm = NN.deploy_rbm_cim(jax.random.PRNGKey(8), params, rcfg, v[:32],
+                             mode="ideal")
+    t0 = (TRACE_COUNTS["cim_mvm_packed"]
+          + TRACE_COUNTS["cim_mvm_transposed"])
+    us_gibbs = _time(lambda: RBM.chip_gibbs_recover(
+        jax.random.PRNGKey(9), crbm, v_c, mask, n_cycles=cycles), n_rep)
+    tr = (TRACE_COUNTS["cim_mvm_packed"]
+          + TRACE_COUNTS["cim_mvm_transposed"]) - t0
+
+    w_aug = RBM._augmented(params)
+    fwd = cim_api.program(jax.random.PRNGKey(10), w_aug, rcfg, in_alpha=1.0,
+                          x_cal=RBM._aug_v(v[:32]), mode="ideal")
+    g_pos_t, g_neg_t = fwd.g_pos.T, fwd.g_neg.T
+    ph = jax.nn.sigmoid(v[:32] @ params["w"] + params["b"])
+    h_int, _ = quantize_to_int(RBM._aug_h((ph > 0.5).astype(jnp.float32)),
+                               1.0, rcfg.in_bits, signed=True)
+    cal = calibrate_layer(jax.random.PRNGKey(11), h_int, g_pos_t, g_neg_t,
+                          rcfg)
+    bwd = CIMLayer(g_pos_t, g_neg_t, fwd.w_max,
+                   jnp.sum(g_pos_t + g_neg_t, axis=0), cal.v_decr,
+                   cal.adc_offset, jnp.asarray(1.0, jnp.float32))
+
+    def compat_loop():
+        vcur, pv = v_c, v_c
+        for i in range(cycles):
+            kh, kv = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(9), i))
+            lh = cim_api.forward(fwd, RBM._aug_v(vcur), rcfg,
+                                 seed=2 * i)[:, :n_hid]
+            h = jax.random.bernoulli(
+                kh, jax.nn.sigmoid(lh)).astype(jnp.float32)
+            lv = cim_api.forward(bwd, RBM._aug_h(h), rcfg,
+                                 seed=2 * i + 1)[:, :n_vis]
+            pv = jax.nn.sigmoid(lv)
+            vcur = jnp.where(mask, v_c,
+                             jax.random.bernoulli(kv, pv).astype(jnp.float32))
+        return pv
+
+    us_compat = _time(compat_loop, n_rep)
+    out.append((f"gibbs_packed_rbm_c{cycles}", round(us_gibbs, 1), tr))
+    out.append((f"gibbs_compat_rbm_c{cycles}", round(us_compat, 1), 0))
     return out
 
 

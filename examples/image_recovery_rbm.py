@@ -1,5 +1,8 @@
 """RBM image recovery on the chip (paper Fig. 4e-g, Ext. Data Fig. 8):
-bidirectional Gibbs sampling using the TNSA's transposable MVM.
+bidirectional Gibbs sampling using the TNSA's transposable MVM — compiled
+ONCE with directions=("fwd", "bwd") and served as a jit'd scan of packed
+fwd/bwd Pallas dispatches (the batched serving driver is
+`python -m repro.launch.recover`).
 
   PYTHONPATH=src python examples/image_recovery_rbm.py
 """
@@ -8,26 +11,20 @@ import jax.numpy as jnp
 
 from repro.core.types import CIMConfig
 from repro.data import binary_patterns, corrupt_flip, corrupt_occlude
-from repro.models import rbm
+from repro.models import nn, rbm
 
-PIX, NV, NH = 128, 138, 32
+PIX, NH = 128, 32
 
 key = jax.random.PRNGKey(0)
 v = binary_patterns(key, 512, d=PIX, rank=4)
-params = rbm.init(jax.random.PRNGKey(1), n_vis=NV, n_hid=NH)
 print("training RBM with CD-1 (+5% noise injection, best for RBMs per "
       "Ext. Data Fig. 6c)...")
-upd = jax.jit(lambda k, p, vb: rbm.cd1_update(k, p, vb, lr=0.1,
-                                              noise_frac=0.05))
-for i in range(800):
-    k = jax.random.fold_in(jax.random.PRNGKey(2), i)
-    idx = jax.random.randint(k, (64,), 0, 512)
-    params = upd(jax.random.fold_in(k, 1), params, v[idx])
+params = rbm.train_cd1(jax.random.PRNGKey(2), v, NH, steps=800)
 
-print("programming the augmented (V+1)x(H+1) array once; both Gibbs "
+print("compiling the augmented (V+1)x(H+1) array once, fwd+bwd; both Gibbs "
       "directions run on the same cells (TNSA transposability)...")
 cfg = CIMConfig(in_bits=2, out_bits=8)
-chip = rbm.deploy(jax.random.PRNGKey(3), params, cfg, v[:64])
+crbm = nn.deploy_rbm_cim(jax.random.PRNGKey(3), params, cfg, v[:64])
 
 vt = binary_patterns(jax.random.PRNGKey(7), 64, d=PIX, rank=4)
 for name, corrupt in [("20% flipped pixels", corrupt_flip),
@@ -35,8 +32,9 @@ for name, corrupt in [("20% flipped pixels", corrupt_flip),
     v_c, mask = corrupt(jax.random.PRNGKey(8), vt, pixels=PIX) \
         if corrupt is corrupt_occlude else corrupt(jax.random.PRNGKey(8),
                                                    vt, 0.2, pixels=PIX)
-    rec = rbm.chip_gibbs_recover(jax.random.PRNGKey(9), chip, cfg, v_c, mask,
-                                 n_cycles=10)
+    traj = rbm.chip_gibbs_recover(jax.random.PRNGKey(9), crbm, v_c, mask,
+                                  n_cycles=10)
+    rec = jnp.where(mask, v_c, traj[-1])   # clamp the trusted pixels
     e0 = float(rbm.l2_error(v_c[:, :PIX], vt[:, :PIX]))
     e1 = float(rbm.l2_error(rec[:, :PIX], vt[:, :PIX]))
     print(f"{name}: L2 error {e0:.1f} -> {e1:.1f} "

@@ -12,9 +12,11 @@ from .conductance import (Conductances, weights_to_conductances,
 from .quant import pact_quantize, quantize_to_int, dequantize  # noqa: F401
 from .noise import weight_noise, relaxation_sigma, apply_relaxation  # noqa: F401
 from .writeverify import write_verify, iterative_program  # noqa: F401
-from .calibration import calibrate_layer, calibrate_v_decr  # noqa: F401
+from .calibration import (calibrate_layer, calibrate_v_decr,
+                          tile_partial_sums)  # noqa: F401
 from .mapping import (MatrixReq, Tile, Plan, PackedPlan, TileSchedule,
-                      plan_layers, pack_tiles, schedule_tiles,
+                      plan_layers, pack_tiles, pack_tiles_transposed,
+                      transpose_tiles, schedule_tiles,
                       ir_drop_max_cols, multicore_mvm, multicore_mvm_packed,
                       interleave_assignment)  # noqa: F401
 from .energy import mvm_cost, neurram_edp, PRIOR_ART_EDP, MVMCost  # noqa: F401

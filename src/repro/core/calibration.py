@@ -32,6 +32,39 @@ def calibrate_v_decr(q_samples, cfg: CIMConfig, coverage: float = 0.999):
     return jnp.maximum(qmax, 1e-9) / cfg.out_mag_levels
 
 
+def tile_partial_sums(x_int, g_pos, g_neg, tile, cfg: CIMConfig,
+                      direction: str = "fwd"):
+    """Normalized analog partial sums ONE core (tile) produces on a batch —
+    the distribution its ADC operating point must cover.
+
+    The TNSA reads the same programmed cells in either direction, and the
+    two directions see DIFFERENT distributions (different summed wire count
+    and a different voltage-mode normalizer), so each direction calibrates
+    on its own partial sums:
+
+      'fwd' (SL->BL): inputs drive the tile's weight rows, outputs appear
+            on its columns; normalizer = per-column sum of G+ + G-.
+      'bwd' (BL->SL): inputs drive the tile's COLUMNS, outputs appear on
+            its rows; normalizer = per-row sum of G+ + G-.
+
+    x_int: (B, R) / (B, C) integer activations in the direction's input
+    space (full-matrix coordinates; the tile's slice is taken here).
+    """
+    xf = x_int.astype(jnp.float32)
+    gp = g_pos[tile.row0:tile.row0 + tile.rows,
+               tile.col0:tile.col0 + tile.cols]
+    gn = g_neg[tile.row0:tile.row0 + tile.rows,
+               tile.col0:tile.col0 + tile.cols]
+    gd = gp - gn
+    if direction == "fwd":
+        return (xf[:, tile.row0:tile.row0 + tile.rows] @ gd) \
+            * cfg.v_read / jnp.sum(gp + gn, axis=0)
+    if direction == "bwd":
+        return (xf[:, tile.col0:tile.col0 + tile.cols] @ gd.T) \
+            * cfg.v_read / jnp.sum(gp + gn, axis=1)
+    raise ValueError(f"direction must be 'fwd' or 'bwd', got {direction!r}")
+
+
 def measure_adc_offsets(key, n_cols: int, cfg: CIMConfig):
     """Neuron-testing mode: zero input through the neurons reveals per-neuron
     offsets, which the controller stores and cancels digitally."""

@@ -27,9 +27,19 @@ serving artifact: `CIMEngine` wraps one for interactive use, and
 `models/nn.deploy_packed_stack` stacks the layers of one across a scanned
 transformer stack (one chip per transformer layer, one engine per TP shard).
 
-`program` / `forward` remain as thin single-matrix wrappers for the
-per-layer demos and tests: one full-matrix fused kernel (or the bit-serial
-oracle when per-phase non-idealities are enabled), returning the
+BIDIRECTIONAL execution (paper Fig. 4e-g; the TNSA runs MVMs SL->BL and
+BL->SL over one programmed array): `compile_chip(...,
+directions=("fwd", "bwd"))` keeps ONE conductance set per matrix and runs
+the calibrate + pack stages PER DIRECTION — the transpose direction gets
+its own per-tile v_decr measured on its own partial-sum distribution and a
+packed view that shares the forward gd_tiles stack by reference
+(`mapping.pack_tiles_transposed`, no conductance copy). `CIMEngine
+.forward(name, x, direction="bwd")` then dispatches the transpose-direction
+packed kernel; `models/nn.deploy_rbm_cim` builds the RBM Gibbs chip on it.
+
+`program` / `forward` remain as thin COMPAT-ONLY single-matrix wrappers for
+the per-layer oracle demos and tests: one full-matrix fused kernel (or the
+bit-serial oracle when per-phase non-idealities are enabled), returning the
 de-normalized digital output in x @ W units with measured ADC offsets
 cancelled — exactly the chip's digital post-processing.
 """
@@ -45,11 +55,12 @@ import jax.numpy as jnp
 from .types import CIMConfig, CoreSpec
 from .quant import quantize_to_int
 from .conductance import weights_to_conductances, program_conductances
-from .calibration import calibrate_layer, calibrate_v_decr, LayerCalibration
+from .calibration import (calibrate_layer, calibrate_v_decr,
+                          tile_partial_sums, LayerCalibration)
 from .writeverify import iterative_program
 from .mapping import (MatrixReq, Plan, PackedPlan, TileSchedule,
-                      ir_drop_max_cols, pack_tiles, plan_layers,
-                      schedule_tiles)
+                      ir_drop_max_cols, pack_tiles, pack_tiles_transposed,
+                      plan_layers, schedule_tiles)
 from ..kernels.cim_mvm.ops import cim_mvm, cim_mvm_packed
 from ..kernels.cim_mvm.ref import cim_mvm_ref, dequantize_output
 
@@ -68,7 +79,14 @@ class CIMLayer(NamedTuple):
 def program(key, w, cfg: CIMConfig, in_alpha=1.0,
             x_cal: Optional[jax.Array] = None, mode: str = "relaxed"
             ) -> CIMLayer:
-    """Program weight matrix w (R, C) onto the chip and calibrate it.
+    """COMPAT-ONLY per-matrix wrapper: program weight matrix w (R, C) onto
+    the chip and calibrate it.
+
+    Deployment goes through `compile_chip` (the five-stage pipeline); this
+    wrapper remains for the per-layer oracle/demo path only (per-phase
+    non-idealities that need the bit-serial reference, models/nn.ChipLinear)
+    and for tests of the programming stages. Do not add serving-path
+    callers — tests/test_bidirectional.py audits for them.
 
     x_cal: optional (B_cal, R) float training-set activations for model-driven
     calibration; defaults to a synthetic batch matched to in_alpha (the paper
@@ -100,7 +118,13 @@ def program(key, w, cfg: CIMConfig, in_alpha=1.0,
 
 def forward(layer: CIMLayer, x, cfg: CIMConfig, *, key=None,
             use_kernel: bool = True, seed: int = 0):
-    """y ~= x @ W through the chip datapath. x: (B, R) float."""
+    """COMPAT-ONLY per-matrix wrapper: y ~= x @ W through the chip
+    datapath. x: (B, R) float.
+
+    Serving runs through `CompiledChip` / `packed_forward`; this wrapper
+    remains for the per-layer oracle/demo path (bit-serial per-phase
+    non-idealities, models/nn.chip_linear) — see `program`.
+    """
     x_int, scale = quantize_to_int(x, layer.in_alpha, cfg.in_bits, signed=True)
     if use_kernel and not _needs_ref(cfg):
         counts = cim_mvm(x_int, layer.g_pos, layer.g_neg, layer.v_decr, cfg,
@@ -132,13 +156,16 @@ def _oracle_only(cfg: CIMConfig) -> bool:
     IR drop is deliberately NOT in this list: the planner MITIGATES it by
     bounding columns per core (`mapping.ir_drop_max_cols`), after which the
     residual droop is below the per-core ADC calibration tolerance — the
-    paper's reason for splitting wide matrices vertically. The remaining
-    per-phase effects (crossbar wire IR, coupling, ADC offset spread) and
-    the stochastic-neuron mode still need the bit-serial oracle.
+    paper's reason for splitting wide matrices vertically. The
+    stochastic-neuron mode is not in it either: the packed kernels carry a
+    deterministic hash-PRNG LFSR analogue, so comparator-bit sampling is
+    servable (the RBM Gibbs loop). The remaining per-phase effects
+    (crossbar wire IR, coupling, ADC offset spread) still need the
+    bit-serial oracle.
     """
     ni = cfg.nonideal
     return (ni.wire_r_alpha > 0 or ni.coupling_sigma > 0
-            or ni.adc_offset_sigma > 0 or cfg.activation == "stochastic")
+            or ni.adc_offset_sigma > 0)
 
 
 def effective_weight(layer: CIMLayer, cfg: CIMConfig):
@@ -156,27 +183,32 @@ class PackedCIMLayer(NamedTuple):
 
 
 def calibrate_tile_v_decr(layer: CIMLayer, tiles, x_cal, cfg: CIMConfig,
-                          coverage: float = 0.999):
-    """Per-core ADC calibration: one v_decr per tile, covering that tile's
-    OWN normalized partial-sum distribution.
+                          coverage: float = 0.999, *,
+                          direction: str = "fwd",
+                          in_alpha: Optional[float] = None):
+    """Per-core, per-DIRECTION ADC calibration: one v_decr per tile,
+    covering that tile's OWN normalized partial-sum distribution in the
+    requested access direction.
 
     The whole-matrix v_decr from calibrate_layer is wrong for split plans:
     a row-split tile's q_t = (x_t @ gd_t) * v_read / norm_t is distributed
     differently from the full matrix's q (fewer summed rows, its own
     normalizer) — the chip calibrates each core separately for exactly this
-    reason. Returns (T,) aligned with the replica-0 tiles in given order.
+    reason. The transpose direction ('bwd') reads the SAME cells with the
+    input/output wire roles swapped, so its distribution differs again
+    (per-row normalizer, that direction's own activations); x_cal then
+    lives in the direction's input space ((B, C) for 'bwd') and `in_alpha`
+    overrides the forward clip stored on the layer.
+    Returns (T,) aligned with the replica-0 tiles in given order.
     """
-    x_int, _ = quantize_to_int(x_cal, layer.in_alpha, cfg.in_bits,
-                               signed=True)
-    xf = x_int.astype(jnp.float32)
+    alpha = layer.in_alpha if in_alpha is None else in_alpha
+    x_int, _ = quantize_to_int(x_cal, alpha, cfg.in_bits, signed=True)
     vds = []
     for t in tiles:
         if t.replica:
             continue
-        gp = layer.g_pos[t.row0:t.row0 + t.rows, t.col0:t.col0 + t.cols]
-        gn = layer.g_neg[t.row0:t.row0 + t.rows, t.col0:t.col0 + t.cols]
-        q = (xf[:, t.row0:t.row0 + t.rows] @ (gp - gn)) * cfg.v_read \
-            / jnp.sum(gp + gn, axis=0)
+        q = tile_partial_sums(x_int, layer.g_pos, layer.g_neg, t, cfg,
+                              direction)
         vds.append(calibrate_v_decr(q, cfg, coverage))
     return jnp.stack(vds)
 
@@ -215,6 +247,13 @@ def packed_forward(pcl: PackedCIMLayer, x, cfg: CIMConfig, *, seed=0,
     de-normalized per core and accumulated digitally in the kernel.
     """
     layer, packed = pcl.layer, pcl.packed
+    if cfg.activation == "stochastic" and packed.n_row_blocks > 1:
+        raise ValueError(
+            f"stochastic sampling on plan '{packed.layer}' would sum "
+            f"comparator bits across {packed.n_row_blocks} input splits "
+            "into non-Bernoulli values; serve a direction whose input fits "
+            "one block (the raw executor multicore_mvm_packed keeps the "
+            "summed-bit semantics for loop-parity studies)")
     x_int, scale = quantize_to_int(x, layer.in_alpha, cfg.in_bits,
                                    signed=True)
     acc = cim_mvm_packed(x_int, packed, cfg, seed=seed, interpret=interpret)
@@ -236,6 +275,11 @@ class CompiledChip:
     introspection, tests and re-planning. jit hashes the treedef, so aux
     must be hashable: the schedules dict travels as a sorted items tuple
     (TileSchedule is frozen), and the Plan is identity-hashed.
+    The chip is programmed ONCE; when compiled with
+    directions=("fwd", "bwd") every matrix additionally carries a
+    TRANSPOSE-DIRECTION packed view in `bwd_layers` — same gd_tiles stack
+    (shared by reference, no conductance copy), per-direction calibration
+    and normalizers — the TNSA's bidirectional (SL->BL and BL->SL) access.
     """
     cfg: CIMConfig
     spec: CoreSpec
@@ -243,16 +287,35 @@ class CompiledChip:
     plan: Plan
     schedules: Dict[str, TileSchedule]
     layers: Dict[str, PackedCIMLayer]
+    bwd_layers: Dict[str, PackedCIMLayer] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def directions(self) -> Tuple[str, ...]:
+        return ("fwd", "bwd") if self.bwd_layers else ("fwd",)
+
+    def layers_for(self, direction: str) -> Dict[str, PackedCIMLayer]:
+        if direction == "fwd":
+            return self.layers
+        if direction == "bwd":
+            if not self.bwd_layers:
+                raise ValueError(
+                    "chip was not compiled with directions=('fwd','bwd')")
+            return self.bwd_layers
+        raise ValueError(f"direction must be 'fwd' or 'bwd', got "
+                         f"{direction!r}")
 
     def tree_flatten(self):
-        return (self.layers,), (self.cfg, self.spec, self.mode, self.plan,
-                                tuple(sorted(self.schedules.items())))
+        return ((self.layers, self.bwd_layers),
+                (self.cfg, self.spec, self.mode, self.plan,
+                 tuple(sorted(self.schedules.items()))))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         cfg, spec, mode, plan, sched_items = aux
         return cls(cfg=cfg, spec=spec, mode=mode, plan=plan,
-                   schedules=dict(sched_items), layers=children[0])
+                   schedules=dict(sched_items), layers=children[0],
+                   bwd_layers=children[1])
 
     def __contains__(self, name: str) -> bool:
         return name in self.layers
@@ -288,8 +351,7 @@ def program_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig, *,
     layers: Dict[str, CIMLayer] = {}
     batches: Dict[str, jax.Array] = {}
     for i, name in enumerate(sorted(weights)):
-        alpha = (in_alpha.get(name, 1.0)
-                 if isinstance(in_alpha, dict) else in_alpha)
+        alpha = _alpha_for(in_alpha, name)
         k_layer, k_syn = jax.random.split(jax.random.fold_in(key, i))
         xc = x_cal.get(name) if x_cal is not None else None
         if xc is None:
@@ -301,31 +363,86 @@ def program_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig, *,
     return layers, batches
 
 
+def _alpha_for(in_alpha: Union[float, Dict[str, float]], name: str) -> float:
+    return (in_alpha.get(name, 1.0)
+            if isinstance(in_alpha, dict) else in_alpha)
+
+
 def calibrate_chip(layers: Dict[str, CIMLayer], plan: Plan,
-                   batches: Dict[str, jax.Array], cfg: CIMConfig
+                   batches: Dict[str, jax.Array], cfg: CIMConfig, *,
+                   direction: str = "fwd",
+                   in_alpha: Optional[Union[float, Dict[str, float]]] = None
                    ) -> Dict[str, jax.Array]:
     """Stage 4 (CALIBRATE): per-core ADC operating points — one v_decr per
-    tile, covering that tile's own partial-sum distribution (the chip
-    calibrates each core separately)."""
-    return {n: calibrate_tile_v_decr(layers[n], plan.tiles_for(n),
-                                     batches[n], cfg) for n in layers}
+    tile PER DIRECTION, covering that tile's own partial-sum distribution
+    in that access direction (the chip calibrates each core separately, and
+    the transpose direction sees a different distribution — per-row
+    normalizer, its own activations). batches live in the direction's input
+    space ((B, C) per name for 'bwd'); in_alpha overrides the forward clip
+    for the transpose direction."""
+    return {n: calibrate_tile_v_decr(
+        layers[n], plan.tiles_for(n), batches[n], cfg, direction=direction,
+        in_alpha=None if in_alpha is None else _alpha_for(in_alpha, n))
+        for n in layers}
 
 
 def pack_chip(layers: Dict[str, CIMLayer], plan: Plan,
               schedules: Dict[str, TileSchedule], cfg: CIMConfig,
-              v_decrs: Dict[str, jax.Array]) -> Dict[str, PackedCIMLayer]:
+              v_decrs: Dict[str, jax.Array], *, direction: str = "fwd",
+              packed: Optional[Dict[str, PackedCIMLayer]] = None,
+              in_alpha: Union[float, Dict[str, float]] = 1.0
+              ) -> Dict[str, PackedCIMLayer]:
     """Stage 5 (PACK): fold conductances, normalizers and per-core ADC steps
-    into each layer's scheduled single-dispatch tensors."""
-    return {n: pack_cim_layer(layers[n], plan.tiles_for(n), cfg,
-                              v_decr=v_decrs[n], schedule=schedules[n])
-            for n in layers}
+    into each layer's scheduled single-dispatch tensors.
+
+    direction='bwd' packs the TRANSPOSE-DIRECTION view of an already-packed
+    forward chip (`packed` = the forward stage-5 output): the gd_tiles
+    stacks are SHARED by reference — one programmed conductance set — and
+    only the per-direction normalizer / denorm / ADC-step tensors are
+    built (`mapping.pack_tiles_transposed`). v_decrs then comes from the
+    'bwd' calibrate stage and in_alpha is the transpose direction's input
+    clip (scalar or per-name).
+    """
+    if direction == "fwd":
+        return {n: pack_cim_layer(layers[n], plan.tiles_for(n), cfg,
+                                  v_decr=v_decrs[n], schedule=schedules[n])
+                for n in layers}
+    if direction != "bwd":
+        raise ValueError(f"direction must be 'fwd' or 'bwd', got "
+                         f"{direction!r}")
+    if packed is None:
+        raise ValueError("direction='bwd' needs the forward pack "
+                         "(packed=...) whose gd_tiles it shares")
+    fold = cfg.activation not in ("tanh", "sigmoid", "stochastic")
+    out: Dict[str, PackedCIMLayer] = {}
+    for n, lay in layers.items():
+        p_bwd = pack_tiles_transposed(
+            plan.tiles_for(n), packed[n].packed,
+            gsum=lay.g_pos + lay.g_neg, v_decr=v_decrs[n],
+            fold_norm=fold, schedule=schedules[n])
+        # the transpose-direction CIMLayer view: SAME conductance arrays
+        # (by reference), with that direction's normalizer (per-row sums),
+        # a conservative whole-matrix ADC step (the per-tile steps in the
+        # pack are what serve) and its own input clip
+        lay_bwd = CIMLayer(
+            lay.g_pos, lay.g_neg, lay.w_max,
+            jnp.sum(lay.g_pos + lay.g_neg, axis=1),
+            jnp.max(v_decrs[n]),
+            jnp.zeros((lay.g_pos.shape[0],), jnp.float32),
+            jnp.asarray(_alpha_for(in_alpha, n), jnp.float32))
+        out[n] = PackedCIMLayer(lay_bwd, p_bwd)
+    return out
 
 
 def compile_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig,
                  spec: CoreSpec = CoreSpec(), mode: str = "relaxed", *,
                  reqs: Optional[Sequence[MatrixReq]] = None,
+                 plan: Optional[Plan] = None,
                  in_alpha: Union[float, Dict[str, float]] = 1.0,
-                 x_cal: Optional[Dict[str, jax.Array]] = None
+                 x_cal: Optional[Dict[str, jax.Array]] = None,
+                 directions: Sequence[str] = ("fwd",),
+                 in_alpha_bwd: Union[float, Dict[str, float]] = 1.0,
+                 x_cal_bwd: Optional[Dict[str, jax.Array]] = None
                  ) -> CompiledChip:
     """Run the full pipeline: plan -> schedule -> program -> calibrate ->
     pack one chip's worth of weight matrices into a servable CompiledChip.
@@ -334,24 +451,67 @@ def compile_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig,
     reqs: optional MatrixReqs (intensities steer duplication); defaults to
     one plain req per weight. in_alpha: PACT clip, scalar or per-name.
     x_cal: optional per-name (B_cal, R) calibration activations.
+    plan: optional pre-built Plan overriding stage 1 (custom mappings such
+    as the pixel-interleaved RBM assignment — the caller then owns the
+    IR-drop constraint that plan_chip would have applied).
+    directions: ("fwd",) or ("fwd", "bwd"). With "bwd", every matrix is
+    ALSO calibrated and packed in the transpose (BL->SL) direction —
+    stages 4 and 5 run per direction on the direction's own partial-sum
+    distribution, while the programmed conductances (stage 3) and the
+    shared gd_tiles stacks stay single-copy. in_alpha_bwd / x_cal_bwd are
+    the transpose direction's input clip and (B_cal, C) calibration
+    activations (synthetic fallback matched to the clip, like forward).
     """
     if _oracle_only(cfg):
         raise ValueError(
             "compile_chip serves the fused kernel path only; per-phase "
             "non-idealities require the bit-serial oracle (core.forward)")
-    reqs = list(reqs) if reqs is not None else [
-        MatrixReq(n, int(w.shape[0]), int(w.shape[1]))
-        for n, w in weights.items()]
-    if {r.name for r in reqs} != set(weights):
-        raise ValueError("reqs names must match weights names")
-    plan = plan_chip(reqs, cfg, spec)
+    directions = tuple(directions)
+    if "fwd" not in directions or set(directions) - {"fwd", "bwd"}:
+        raise ValueError(f"directions must be ('fwd',) or ('fwd','bwd'), "
+                         f"got {directions}")
+    if plan is None:
+        reqs = list(reqs) if reqs is not None else [
+            MatrixReq(n, int(w.shape[0]), int(w.shape[1]))
+            for n, w in weights.items()]
+        if {r.name for r in reqs} != set(weights):
+            raise ValueError("reqs names must match weights names")
+        plan = plan_chip(reqs, cfg, spec)
+    else:
+        for n, w in weights.items():
+            ts = plan.tiles_for(n)
+            if not ts:
+                raise ValueError(f"supplied plan has no tiles for '{n}'")
+            ext = (max(t.row0 + t.rows for t in ts),
+                   max(t.col0 + t.cols for t in ts))
+            if ext != tuple(w.shape):
+                raise ValueError(
+                    f"supplied plan covers {ext} for '{n}' but the weight "
+                    f"is {tuple(w.shape)}")
     schedules = schedule_chip(plan, sorted(weights))
     layers, batches = program_chip(key, weights, cfg, mode=mode,
                                    in_alpha=in_alpha, x_cal=x_cal)
     v_decrs = calibrate_chip(layers, plan, batches, cfg)
     packed = pack_chip(layers, plan, schedules, cfg, v_decrs)
+    bwd_packed: Dict[str, PackedCIMLayer] = {}
+    if "bwd" in directions:
+        batches_bwd: Dict[str, jax.Array] = {}
+        for i, n in enumerate(sorted(weights)):
+            xc = x_cal_bwd.get(n) if x_cal_bwd is not None else None
+            if xc is None:
+                alpha_b = _alpha_for(in_alpha_bwd, n)
+                xc = alpha_b * jax.random.truncated_normal(
+                    jax.random.fold_in(key, 1009 + i), -2.0, 2.0,
+                    (64, weights[n].shape[1]))
+            batches_bwd[n] = xc
+        v_decrs_bwd = calibrate_chip(layers, plan, batches_bwd, cfg,
+                                     direction="bwd", in_alpha=in_alpha_bwd)
+        bwd_packed = pack_chip(layers, plan, schedules, cfg, v_decrs_bwd,
+                               direction="bwd", packed=packed,
+                               in_alpha=in_alpha_bwd)
     return CompiledChip(cfg=cfg, spec=spec, mode=mode, plan=plan,
-                        schedules=schedules, layers=packed)
+                        schedules=schedules, layers=packed,
+                        bwd_layers=bwd_packed)
 
 
 class CIMEngine:
@@ -388,8 +548,8 @@ class CIMEngine:
         self.interpret = interpret
         self.chip: Optional[CompiledChip] = None
         # seed is a traced SMEM input, so per-call seeds never retrace
-        # (stochastic activation itself is oracle-only, rejected above —
-        # direct packed_forward users can still thread seeds)
+        # (matters for stochastic-activation sampling, where every Gibbs
+        # half-step threads a fresh seed)
         self._dispatch = jax.jit(
             functools.partial(packed_forward, cfg=cfg, interpret=interpret))
 
@@ -403,18 +563,29 @@ class CIMEngine:
 
     def program(self, key, weights: Dict[str, jax.Array], *,
                 reqs: Optional[Sequence[MatrixReq]] = None,
+                plan: Optional[Plan] = None,
                 in_alpha: Union[float, Dict[str, float]] = 1.0,
-                x_cal: Optional[Dict[str, jax.Array]] = None) -> Plan:
+                x_cal: Optional[Dict[str, jax.Array]] = None,
+                directions: Sequence[str] = ("fwd",),
+                in_alpha_bwd: Union[float, Dict[str, float]] = 1.0,
+                x_cal_bwd: Optional[Dict[str, jax.Array]] = None) -> Plan:
         """Compile `weights` into a fresh CompiledChip (re-programming
-        discards the old chip state). See `compile_chip`."""
+        discards the old chip state). See `compile_chip`; with
+        directions=("fwd", "bwd") every matrix also serves transposed."""
         self.chip = compile_chip(key, weights, self.cfg, self.spec,
-                                 self.mode, reqs=reqs, in_alpha=in_alpha,
-                                 x_cal=x_cal)
+                                 self.mode, reqs=reqs, plan=plan,
+                                 in_alpha=in_alpha, x_cal=x_cal,
+                                 directions=directions,
+                                 in_alpha_bwd=in_alpha_bwd,
+                                 x_cal_bwd=x_cal_bwd)
         return self.chip.plan
 
-    def forward(self, name: str, x, *, seed: int = 0):
-        """y ~= x @ W_name via the packed dispatch (one pallas_call)."""
-        return self._dispatch(self.layers[name], x,
+    def forward(self, name: str, x, *, direction: str = "fwd",
+                seed: int = 0):
+        """y ~= x @ W_name (direction='fwd', SL->BL) or x @ W_name.T
+        (direction='bwd', BL->SL — the transpose-direction packed dispatch
+        over the same programmed cells) via one pallas_call."""
+        return self._dispatch(self.chip.layers_for(direction)[name], x,
                               seed=jnp.asarray(seed, jnp.int32))
 
     def __contains__(self, name: str) -> bool:

@@ -29,6 +29,14 @@ and fifth stages live here:
     accumulated digitally — inside the kernel via output-block index maps
     for single-pass plans, after the dispatch for pass-major scheduled
     plans (whose revisits of a column block are not grid-consecutive).
+  * `pack_tiles_transposed` (stage 5, transpose direction): the BL->SL
+    view of the same plan for bidirectional workloads (paper Fig. 4e-g
+    RBM Gibbs sampling). It REUSES the forward pack's gd_tiles stack —
+    one programmed conductance set, two directions — and only builds the
+    per-direction normalizer / ADC-step / denorm tensors (the transpose
+    direction normalizes by per-tile ROW sums and carries its own
+    calibration); `transpose_tiles` gives the matching per-tile view for
+    the loop executor and calibration.
 
 Stages 3 and 4 (PROGRAM, CALIBRATE) live in `core.cim`, which composes all
 five into `compile_chip` -> `CompiledChip`, the artifact `CIMEngine` and
@@ -299,6 +307,13 @@ class PackedPlan:
                       scheduled kernel (kernels/cim_mvm), which writes one
                       partial block per slot and reduces them per column
                       block after the dispatch.
+      transpose:      True for a TRANSPOSE-DIRECTION plan
+                      (`pack_tiles_transposed`): gd_tiles are SHARED with the
+                      forward plan (stored (T, bn, bk), i.e. transposed
+                      relative to this plan's logical input/output blocks)
+                      and execution routes to the transpose-direction kernel,
+                      which contracts each tile on its stored COLUMN axis —
+                      the TNSA's BL->SL access of the same programmed cells.
     """
     layer: str
     bk: int
@@ -309,6 +324,7 @@ class PackedPlan:
     col_block: Tuple[int, ...]
     seq_slot: Tuple[int, ...]
     n_passes: int
+    transpose: bool
     gd_tiles: jax.Array
     inv_norm_tiles: jax.Array
     v_decr_tiles: jax.Array
@@ -334,12 +350,49 @@ class PackedPlan:
         children = (self.gd_tiles, self.inv_norm_tiles, self.v_decr_tiles,
                     self.denorm_tiles)
         aux = (self.layer, self.bk, self.bn, self.n_rows, self.n_cols,
-               self.row_block, self.col_block, self.seq_slot, self.n_passes)
+               self.row_block, self.col_block, self.seq_slot, self.n_passes,
+               self.transpose)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*aux, *children)
+
+
+def _slot_order(tiles: Sequence[Tile], schedule: Optional[TileSchedule]
+                ) -> Tuple[List[Optional[int]], int, int]:
+    """The slot -> tile-index order a (scheduled) pack executes in.
+
+    Shared by `pack_tiles` and `pack_tiles_transposed` so both directions of
+    one programmed array agree slot-for-slot (the transpose-direction pack
+    indexes the forward direction's gd_tiles stack by slot). Returns
+    (order, n_passes, pass_len); idle slots are None.
+    """
+    if schedule is None:
+        order: List[Optional[int]] = sorted(
+            range(len(tiles)),
+            key=lambda i: (tiles[i].col0, tiles[i].row0, tiles[i].seq_slot))
+        return order, 1, len(tiles)
+    # the non-idle slots must be exactly a permutation of the tiles —
+    # a bare count check would let a duplicated index pack one tile
+    # twice while silently dropping another
+    covered = sorted(i for i in schedule.order if i is not None)
+    if covered != list(range(len(tiles))):
+        raise ValueError("schedule does not cover this tile sequence "
+                         f"exactly once ({schedule.order=} vs "
+                         f"{len(tiles)} tiles)")
+    return list(schedule.order), schedule.n_passes, schedule.pass_len
+
+
+def transpose_tiles(tiles: Sequence[Tile]) -> List[Tile]:
+    """The SAME physical tiles viewed in the transpose (BL->SL) direction:
+    row/col offsets and extents swap, while core / replica / seq_slot — the
+    physical placement — are untouched. This is the tile-level statement of
+    TNSA bidirectionality: one programmed core region, two access
+    orientations. Used by the transpose-direction loop executor (parity
+    reference) and per-direction calibration."""
+    return [dataclasses.replace(t, row0=t.col0, col0=t.row0,
+                                rows=t.cols, cols=t.rows) for t in tiles]
 
 
 def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
@@ -374,22 +427,7 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
             raise ValueError(
                 f"tile offsets ({t.row0},{t.col0}) not aligned to "
                 f"({bk},{bn}) blocks — not a splitter-produced plan")
-    if schedule is None:
-        order: List[Optional[int]] = sorted(
-            range(len(tiles)),
-            key=lambda i: (tiles[i].col0, tiles[i].row0, tiles[i].seq_slot))
-        n_passes, pass_len = 1, len(tiles)
-    else:
-        # the non-idle slots must be exactly a permutation of the tiles —
-        # a bare count check would let a duplicated index pack one tile
-        # twice while silently dropping another
-        covered = sorted(i for i in schedule.order if i is not None)
-        if covered != list(range(len(tiles))):
-            raise ValueError("schedule does not cover this tile sequence "
-                             f"exactly once ({schedule.order=} vs "
-                             f"{len(tiles)} tiles)")
-        order = list(schedule.order)
-        n_passes, pass_len = schedule.n_passes, schedule.pass_len
+    order, n_passes, pass_len = _slot_order(tiles, schedule)
     v_decr = jnp.broadcast_to(jnp.asarray(v_decr, jnp.float32),
                               (len(tiles),))
     n_rows = max(t.row0 + t.rows for t in tiles)
@@ -436,7 +474,84 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
         col_block=tuple(col_block),
         seq_slot=tuple(slot_pass),
         n_passes=n_passes,
+        transpose=False,
         gd_tiles=jnp.stack(gd_tiles),
+        inv_norm_tiles=jnp.stack(inv_tiles)[:, None, :],
+        v_decr_tiles=jnp.stack(vd_slots),
+        denorm_tiles=jnp.stack(den_tiles)[:, None, :])
+
+
+def pack_tiles_transposed(tiles: Sequence[Tile], packed: PackedPlan, *,
+                          gsum=None, v_decr=1.0, fold_norm: bool = False,
+                          schedule: Optional[TileSchedule] = None
+                          ) -> PackedPlan:
+    """Stage 5 (PACK), transpose direction: the BL->SL view of a packed plan.
+
+    The TNSA runs MVMs in both directions on ONE programmed conductance set,
+    so the transpose-direction pack does NOT copy the conductances: it
+    reuses `packed.gd_tiles` (the forward stack, by reference) and only
+    builds the per-direction small tensors — the voltage-mode normalizer of
+    the transpose direction (per-tile ROW sums of G+ + G-, since the roles
+    of input and output wires swap), the per-tile ADC steps from the
+    transpose direction's own calibration, and the matching denorm factors.
+
+    tiles / schedule: the SAME forward-space inputs given to `pack_tiles`
+    (slot order is recomputed identically, so slot s of this plan is the
+    transpose view of slot s of `packed`).
+    gsum: (R, C) G+ + G- in the FORWARD orientation; None means raw matmul.
+    v_decr: scalar or (T,) transpose-direction ADC steps aligned with the
+    replica-0 tiles in the order given.
+
+    The result is a PackedPlan in the transpose direction's OWN logical
+    space (n_rows/n_cols, row/col block maps and block sizes all swapped)
+    with `transpose=True`, which routes execution to the transpose-direction
+    kernel (`kernels/cim_mvm.cim_mvm_transposed_pallas`).
+    """
+    tiles = [t for t in tiles if t.replica == 0]
+    if not tiles:
+        raise ValueError("pack_tiles_transposed needs at least one tile")
+    if packed.transpose:
+        raise ValueError("packed must be the forward-direction plan")
+    order, n_passes, pass_len = _slot_order(tiles, schedule)
+    if len(order) != packed.n_tiles or n_passes != packed.n_passes:
+        raise ValueError(
+            f"tiles/schedule do not match the forward pack "
+            f"({len(order)} slots vs {packed.n_tiles}, "
+            f"{n_passes} passes vs {packed.n_passes})")
+    v_decr = jnp.broadcast_to(jnp.asarray(v_decr, jnp.float32),
+                              (len(tiles),))
+    bk_f, bn_f = packed.bk, packed.bn
+    zero_out = jnp.zeros((bk_f,), jnp.float32)   # transpose output block
+    inv_tiles, den_tiles, vd_slots = [], [], []
+    for idx in order:
+        if idx is None:                    # idle slot: a core sits out
+            inv_tiles.append(zero_out)
+            den_tiles.append(zero_out)     # accumulates exactly zero
+            vd_slots.append(jnp.asarray(1.0, jnp.float32))
+            continue
+        t = tiles[idx]
+        mask = zero_out.at[:t.rows].set(1.0)
+        if gsum is None:
+            inv = mask                     # normalizer 1 on valid rows
+            norm = mask
+        else:
+            norm_t = jnp.sum(jax.lax.dynamic_slice(
+                gsum, (t.row0, t.col0), (t.rows, t.cols)), axis=1)
+            norm = zero_out.at[:t.rows].set(norm_t)
+            inv = jnp.where(norm > 0, 1.0 / jnp.maximum(norm, 1e-30), 0.0)
+        den_tiles.append((mask * norm * v_decr[idx]) if fold_norm else mask)
+        inv_tiles.append(inv)
+        vd_slots.append(v_decr[idx])
+
+    return PackedPlan(
+        layer=packed.layer, bk=bn_f, bn=bk_f,
+        n_rows=packed.n_cols, n_cols=packed.n_rows,
+        row_block=packed.col_block,
+        col_block=packed.row_block,
+        seq_slot=packed.seq_slot,
+        n_passes=n_passes,
+        transpose=True,
+        gd_tiles=packed.gd_tiles,          # SHARED — one conductance set
         inv_norm_tiles=jnp.stack(inv_tiles)[:, None, :],
         v_decr_tiles=jnp.stack(vd_slots),
         denorm_tiles=jnp.stack(den_tiles)[:, None, :])
@@ -453,7 +568,9 @@ def multicore_mvm_packed(x, packed: PackedPlan, cfg=None, *, seed=0,
     output-block index maps; there is no Python loop and a single jit trace
     per plan shape. Multi-pass (seq-slot scheduled) plans take the
     pass-major grid kernel automatically; `scheduled` forces either kernel
-    (benchmark use).
+    (benchmark use). Transpose-direction plans (`pack_tiles_transposed`,
+    packed.transpose=True) always take the transpose-direction kernel,
+    which writes one partial block per slot — `scheduled` is ignored.
     """
     from ..kernels.cim_mvm.ops import cim_mvm_packed, packed_call
     if cfg is not None:

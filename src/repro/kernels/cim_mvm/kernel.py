@@ -39,8 +39,25 @@ A third kernel executes SCHEDULED plans (core/mapping.schedule_tiles):
     sums too: digitally, outside the analog array. Idle padding slots
     carry zero denorm and contribute exact zeros.
 
-The bit-serial input loop of the chip is algebraically folded in all three
-(sum_k 2^k p_k = x_int, exact for the linear datapath); per-phase
+A fourth kernel executes the TRANSPOSE direction (TNSA bidirectionality,
+paper Fig. 4e-g — the BL->SL read of the same programmed cells):
+
+  * `cim_mvm_transposed_pallas` — grid (i, t) over the SHARED forward tile
+    stack (no transposed copy of the conductances): each slot contracts its
+    stored (bk, bn) block on the COLUMN axis (x @ gd.T via dot_general),
+    normalizes by the transpose direction's per-row normalizer and applies
+    that direction's own calibrated ADC step. Forward slot order is not
+    output-contiguous in the transpose direction, so — like the scheduled
+    kernel — each slot writes a private partial block and the wrapper
+    reduces them per output block after the dispatch.
+
+The stochastic-activation (LFSR comparator-bit) path is supported in ALL
+packed kernels: counts are neuron-unit bits, so the kernels weight them by
+the valid-column mask (invn > 0) instead of the fold_norm denorm — one pack
+serves both 'none' and 'stochastic' dispatches (the RBM Gibbs loop).
+
+The bit-serial input loop of the chip is algebraically folded in all of
+them (sum_k 2^k p_k = x_int, exact for the linear datapath); per-phase
 non-ideality studies use the jnp oracle in ref.py.
 """
 from __future__ import annotations
@@ -57,7 +74,8 @@ from ..prng import hash_uniform
 # Trace counters (incremented while jit TRACES each wrapper, not per call):
 # tests and benchmarks assert "one compiled dispatch per plan shape" with
 # these. Keyed by kernel name.
-TRACE_COUNTS = {"cim_mvm": 0, "cim_mvm_packed": 0, "cim_mvm_scheduled": 0}
+TRACE_COUNTS = {"cim_mvm": 0, "cim_mvm_packed": 0, "cim_mvm_scheduled": 0,
+                "cim_mvm_transposed": 0}
 
 
 def _pwl_tanh(steps, n_max: float):
@@ -94,6 +112,21 @@ def _epilogue(q, vd, activation: str, n_max: int, seed_ref=None, ij=(0, 0)):
         u = hash_uniform(q.shape, seed_ref[0], ij[0], ij[1]) * 2.0 - 1.0
         return (q + u * (vd * n_max) > 0).astype(jnp.float32)
     return sign * jnp.minimum(steps, n_max)
+
+
+def _acc_weight(invn, den, activation: str):
+    """Per-column digital accumulation weight for one tile's counts.
+
+    Stochastic counts are comparator BITS in neuron units: the fold_norm
+    serving pack's denorm (mask * norm * v_decr) is meaningless for them,
+    so a stochastic dispatch masks valid columns instead (invn > 0 exactly
+    on non-padded columns) — letting ONE pack serve both 'none'
+    (de-normalized counts) and 'stochastic' (bit-sampling) dispatches of
+    the same direction, as the RBM Gibbs loop does.
+    """
+    if activation == "stochastic":
+        return (invn > 0).astype(jnp.float32)
+    return den
 
 
 def _cim_kernel(x_ref, gd_ref, invn_ref, vd_ref, seed_ref, out_ref, acc_ref, *,
@@ -189,7 +222,7 @@ def _cim_packed_kernel(row_ref, col_ref, x_ref, gd_ref, invn_ref, den_ref,
                 preferred_element_type=jnp.float32) * v_read * invn_ref[0]
     counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
                        ij=(pl.program_id(0), t))
-    out_ref[...] += counts * den_ref[0]
+    out_ref[...] += counts * _acc_weight(invn_ref[0], den_ref[0], activation)
 
 
 @functools.partial(
@@ -273,7 +306,8 @@ def _cim_sched_kernel(row_ref, x_ref, gd_ref, invn_ref,
                 preferred_element_type=jnp.float32) * v_read * invn_ref[0]
     counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
                        ij=(pl.program_id(0), t))
-    out_ref[...] = (counts * den_ref[0]).astype(out_ref.dtype)
+    out_ref[...] = (counts * _acc_weight(invn_ref[0], den_ref[0],
+                                         activation)).astype(out_ref.dtype)
 
 
 @functools.partial(
@@ -350,4 +384,100 @@ def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
     y = jnp.zeros((mp, n_col_blocks * bn), jnp.float32)
     for t, c in enumerate(col_block):
         y = y.at[:, c * bn:(c + 1) * bn].add(parts[:, t * bn:(t + 1) * bn])
+    return y
+
+
+# -------------------------------------------------- transpose-direction executor
+
+def _cim_transposed_kernel(in_ref, x_ref, gd_ref, invn_ref, den_ref, vd_ref,
+                           seed_ref, out_ref, *, v_read: float,
+                           activation: str, n_max: int):
+    """One grid step = one (batch block, tile slot) pair, transpose direction.
+
+    The tile block is the SAME stored (bk, bn) forward block — the shared
+    conductance stack — contracted on its COLUMN axis (dot_general over dim 1
+    of both operands == x @ gd.T without materializing a transposed copy):
+    the BL->SL read of the programmed cells. Slot order is the forward
+    pack's, which is NOT output-contiguous in the transpose direction, so
+    each slot writes its own partial block (every output block visited
+    exactly once — the Pallas TPU consecutive-revisit invariant holds
+    trivially) and the wrapper reduces partials per output block after the
+    dispatch, exactly like the scheduled kernel.
+    """
+    t = pl.program_id(1)
+    q = jax.lax.dot_general(
+        x_ref[...], gd_ref[0], dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * v_read * invn_ref[0]
+    counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
+                       ij=(pl.program_id(0), t))
+    out_ref[...] = (counts * _acc_weight(invn_ref[0], den_ref[0],
+                                         activation)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("in_block", "out_block", "activation", "n_max",
+                     "v_read", "bm", "interpret"))
+def cim_mvm_transposed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
+                              v_decr_tiles, seed, *,
+                              in_block, out_block, activation: str = "none",
+                              n_max: int = 127, v_read: float = 0.5,
+                              bm: int = 256, interpret: bool = False):
+    """Whole-layer transpose-direction CIM MVM: ONE pallas_call over the
+    SHARED forward tile stack, contracted on the stored column axis.
+
+    x:(M, K') f32 integer-valued activations (K' = the layer's weight
+    COLUMNS — the transpose direction's input space); gd_tiles:(T,bk,bn)
+    the forward stack, unchanged and uncopied; inv_norm_tiles /
+    denorm_tiles:(T,1,bk) transpose-direction per-ROW tensors
+    (`pack_tiles_transposed`); v_decr_tiles:(T,) that direction's ADC
+    steps. in_block/out_block: static per-slot input (forward col) / output
+    (forward row) block indices. Returns (M_padded, n_out_blocks*bk) f32 —
+    caller slices to (M, R). Pass serialization needs no special grid here:
+    every slot writes a private partial, reduced per output block after the
+    dispatch (digital row-split accumulation, where the chip does it too).
+    """
+    TRACE_COUNTS["cim_mvm_transposed"] += 1
+    m, kdim = x.shape
+    n_slots, bko, bni = gd_tiles.shape     # stored fwd layout: out/in swap
+    bm = min(bm, m)
+    n_in_blocks = max(in_block) + 1
+    n_out_blocks = max(out_block) + 1
+
+    def pad(a, mults):
+        pads = [(0, -s % t) for s, t in zip(a.shape, mults)]
+        return jnp.pad(a, pads) if any(p[1] for p in pads) else a
+
+    xp = pad(x, (bm, 1))
+    xp = jnp.pad(xp, ((0, 0), (0, n_in_blocks * bni - kdim))) \
+        if kdim < n_in_blocks * bni else xp
+    mp = xp.shape[0]
+
+    in_idx = jnp.asarray(in_block, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm, n_slots),
+        in_specs=[
+            pl.BlockSpec((bm, bni), lambda i, t, inb: (i, inb[t])),
+            pl.BlockSpec((1, bko, bni), lambda i, t, inb: (t, 0, 0)),
+            pl.BlockSpec((1, 1, bko), lambda i, t, inb: (t, 0, 0)),
+            pl.BlockSpec((1, 1, bko), lambda i, t, inb: (t, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bko), lambda i, t, inb: (i, t)),
+    )
+    parts = pl.pallas_call(
+        functools.partial(_cim_transposed_kernel, v_read=v_read,
+                          activation=activation, n_max=n_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, n_slots * bko), jnp.float32),
+        interpret=interpret,
+    )(in_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
+      v_decr_tiles.astype(jnp.float32),
+      jnp.asarray(seed, jnp.int32).reshape(1))
+    y = jnp.zeros((mp, n_out_blocks * bko), jnp.float32)
+    for t, c in enumerate(out_block):
+        y = y.at[:, c * bko:(c + 1) * bko].add(parts[:, t * bko:(t + 1) * bko])
     return y

@@ -12,6 +12,9 @@ inside the kernel; per-tile counts are weighted by the plan's denorm_tiles
 schedule has more than one pass (merged cores time-shared via seq_slot)
 route to the pass-major scheduled kernel; single-pass plans keep the PR-1
 tile-grid kernel, so unmerged plans pay no scheduling cost.
+Transpose-direction plans (core/mapping.pack_tiles_transposed — the BL->SL
+read of the same programmed tile stack) route to the transpose-direction
+kernel regardless of pass structure.
 
 On this CPU container the kernels run in interpret mode; on TPU set
 interpret=False (default chosen from backend).
@@ -22,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (cim_mvm_pallas, cim_mvm_packed_pallas,
-                     cim_mvm_scheduled_pallas)
+                     cim_mvm_scheduled_pallas, cim_mvm_transposed_pallas)
 from ...core.types import CIMConfig
 
 
@@ -69,6 +72,17 @@ def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
             f"'{packed.layer}' covers {packed.n_rows} weight rows")
     if interpret is None:
         interpret = _default_interpret()
+    if packed.transpose:
+        # transpose-direction plan: one kernel serves any pass structure
+        # (each slot writes a private partial — `scheduled` is moot)
+        out = cim_mvm_transposed_pallas(
+            x.astype(jnp.float32), packed.gd_tiles, packed.inv_norm_tiles,
+            packed.denorm_tiles, packed.v_decr_tiles,
+            jnp.asarray(seed, jnp.int32),
+            in_block=packed.row_block, out_block=packed.col_block,
+            activation=activation, n_max=n_max, v_read=v_read, bm=bm,
+            interpret=interpret)
+        return out[:x.shape[0], :packed.n_cols]
     if scheduled is None:
         scheduled = packed.n_passes > 1
     if packed.n_passes > 1 and not scheduled:

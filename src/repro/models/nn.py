@@ -515,3 +515,84 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
                 spl.partition, spl.n_shards)
         out["shared_attn"] = new_sa
     return out
+
+
+def deploy_rbm_cim(key, params, ccfg: CIMConfig, v_cal, *,
+                   mode: str = "relaxed", interleave: bool = False,
+                   spec: Optional[CoreSpec] = None):
+    """Compile an RBM onto ONE bidirectional chip — the fourth serving
+    surface on `CompiledChip` and the first consumer of transpose-direction
+    packing (paper Fig. 4e-g, Bayesian image recovery).
+
+    The augmented (V+1, H+1) array (bias vectors embedded via the
+    always-on-unit trick) goes through the full chip-compiler pipeline ONCE
+    with directions=("fwd", "bwd"): v->h runs SL->BL, h->v runs BL->SL over
+    the same programmed conductances, each direction carrying its own
+    per-tile ADC calibration measured on training-set-driven activations
+    (visibles forward, a software half-step's hiddens backward).
+
+    interleave=True applies the paper's Fig. 4f pixel-interleaved
+    multi-core mapping as a PLAN OPTION: visible rows are permuted so core
+    k holds units {k, k + n_cores, ...} — every core sees a strided,
+    down-sampled version of the whole image, equalizing per-core output
+    dynamic range before per-core calibration. The permutation is realized
+    as a custom stage-1 Plan handed to `compile_chip` (rows padded to equal
+    per-core bins so the packed block geometry stays aligned); the Gibbs
+    loop gathers inputs / scatters outputs by the stored permutation inside
+    its jit.
+
+    Returns `models/rbm.ChipRBM`; serve with `rbm.chip_gibbs_recover` or
+    `launch/recover.py`.
+    """
+    from . import rbm
+    from ..core.mapping import (Plan, Tile, interleave_assignment,
+                                ir_drop_max_cols)
+    spec = spec or CoreSpec()
+    n_vis, n_hid = params["w"].shape
+    w_aug = rbm._augmented(params)             # (V+1, H+1)
+    n_units, n_cols = w_aug.shape
+    row_cap = spec.rows // 2                   # differential weight rows
+    perm = inv_perm = None
+    plan = None
+    n_pad = n_units
+    if interleave:
+        n_blocks = -(-n_units // row_cap)
+        bs = -(-n_units // n_blocks)           # equal per-core bins
+        n_pad = n_blocks * bs                  # pad with inert zero rows
+        assign = interleave_assignment(n_pad, n_blocks)
+        perm = jnp.argsort(assign)             # stable: bin k = units = k (mod n_blocks)
+        inv_perm = jnp.argsort(perm)
+        w_dep = jnp.zeros((n_pad, n_cols)).at[:n_units].set(w_aug)[perm]
+        # the custom plan owns the constraints plan_chip would have
+        # applied: keep the IR-drop vertical-split bound in force
+        col_cap = min(spec.cols, ir_drop_max_cols(ccfg, spec) or spec.cols)
+        n_cblocks = -(-n_cols // col_cap)
+        tiles = [Tile("rbm", row0=i * bs, col0=j * col_cap, rows=bs,
+                      cols=min(col_cap, n_cols - j * col_cap),
+                      core=i * n_cblocks + j)
+                 for i in range(n_blocks) for j in range(n_cblocks)]
+        if len(tiles) > spec.n_cores:
+            raise ValueError(f"interleaved RBM needs {len(tiles)} cores "
+                             f"> {spec.n_cores} available")
+        plan = Plan(tiles=tiles, n_cores_used=len(tiles), duplicated={},
+                    merged=[])
+    else:
+        w_dep = w_aug
+
+    # training-set-driven calibration for BOTH directions (Ext. Data
+    # Fig. 5): visibles drive the fwd distribution, hiddens from a software
+    # half-step drive the bwd one
+    xv = rbm._aug_v(v_cal)
+    if n_pad > xv.shape[1]:
+        xv = jnp.pad(xv, ((0, 0), (0, n_pad - xv.shape[1])))
+    if perm is not None:
+        xv = xv[:, perm]
+    ph = jax.nn.sigmoid(v_cal @ params["w"] + params["b"])
+    xh = rbm._aug_h((ph > 0.5).astype(jnp.float32))
+
+    chip = cim_api.compile_chip(
+        key, {"rbm": w_dep.astype(jnp.float32)}, ccfg, spec, mode,
+        plan=plan, in_alpha=1.0, x_cal={"rbm": xv},
+        directions=("fwd", "bwd"), in_alpha_bwd=1.0, x_cal_bwd={"rbm": xh})
+    return rbm.ChipRBM(chip=chip, perm=perm, inv_perm=inv_perm,
+                       n_vis=n_vis, n_hid=n_hid, n_pad=n_pad)

@@ -10,29 +10,38 @@ Bidirectionality: the TNSA performs v->h in the SL->BL direction and h->v in
 BL->SL on the SAME programmed array. We embed both bias vectors in the array
 with the classic always-on-unit trick (one extra visible row holds the hidden
 biases, one extra hidden column holds the visible biases), so the array is
-(V+1) x (H+1) and is programmed ONCE — transposing a stored conductance array
-is exactly what the TNSA gives for free.
+(V+1) x (H+1) and is programmed ONCE. Deployment goes through the chip
+compiler: `models/nn.deploy_rbm_cim` runs `core.cim.compile_chip(...,
+directions=("fwd", "bwd"))` — plan / schedule / program once, calibrate and
+pack PER DIRECTION — yielding one `CompiledChip` whose transpose-direction
+packed view indexes the same gd_tiles stack (no second conductance copy).
+`chip_gibbs_recover` is then a jit'd, batched `lax.scan` Gibbs loop
+alternating the packed fwd/bwd Pallas dispatches with pixel clamping; served
+end-to-end by `launch/recover.py`.
 
-Stochastic neurons: the chip injects LFSR pseudo-noise into the integrator and
-emits the comparator bit (kernel-level model: activation='stochastic'). At the
-model level we sample h ~ Bernoulli(sigmoid(.)) from the chip-measured,
-noise-bearing pre-activations — the sigmoid shaping comes from the neuron's
-counter schedule (see kernels/cim_mvm). Pixel-interleaved multi-core mapping
-(paper Fig. 4f) is exercised via core.mapping.interleave_assignment in tests.
+Stochastic neurons: the chip injects LFSR pseudo-noise into the integrator
+and emits the comparator bit (kernel-level model: activation='stochastic',
+supported by the packed kernels). The default Gibbs loop samples digitally
+from the chip-measured pre-activations (h ~ Bernoulli(sigmoid(.))); with
+stochastic=True the h->v half-step instead takes the comparator bits straight
+off the transpose-direction dispatch — exact chip behavior whenever the
+hidden space fits one input block, which it does at paper geometry.
+
+Pixel-interleaved multi-core mapping (paper Fig. 4f): `deploy_rbm_cim(...,
+interleave=True)` permutes the visible rows so each core holds a strided,
+down-sampled subset of the image (`core.mapping.interleave_assignment`),
+equalizing per-core output dynamic range before per-core ADC calibration.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple
+import dataclasses
+import functools
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import nn
-from ..core.types import CIMConfig
-from ..core import cim as cim_api
-from ..core.cim import CIMLayer
-from ..core.calibration import calibrate_layer
-from ..core.quant import quantize_to_int
+from ..core.cim import CompiledChip, packed_forward
 
 N_VIS = 794
 N_HID = 120
@@ -70,6 +79,27 @@ def cd1_update(key, params, v_data, lr=0.05, noise_frac: float = 0.0):
     }
 
 
+def train_cd1(key, v_data, n_hid: int, steps: int = 800, batch: int = 64,
+              lr: float = 0.1, noise_frac: float = 0.05) -> Dict:
+    """THE CD-1 training recipe — shared by tests, the example, the
+    accuracy benchmark and the recover serving driver, so the four
+    surfaces cannot drift onto differently-trained RBMs.
+
+    v_data: (N, n_vis) binary training patterns; random minibatches of
+    `batch` drive jit'd `cd1_update` with 5% weight-noise injection by
+    default (best for RBMs per Ext. Data Fig. 6c). Returns params.
+    """
+    params = init(jax.random.fold_in(key, 0), n_vis=v_data.shape[1],
+                  n_hid=n_hid)
+    upd = jax.jit(functools.partial(cd1_update, lr=lr,
+                                    noise_frac=noise_frac))
+    for i in range(steps):
+        k = jax.random.fold_in(jax.random.fold_in(key, 1), i)
+        idx = jax.random.randint(k, (batch,), 0, v_data.shape[0])
+        params = upd(jax.random.fold_in(k, 1), params, v_data[idx])
+    return params
+
+
 def gibbs_recover(key, params, v_corrupt, mask_known, n_cycles: int = 10):
     """Software reference recovery. mask_known: 1 where pixel is trusted."""
     v = v_corrupt
@@ -85,9 +115,36 @@ def gibbs_recover(key, params, v_corrupt, mask_known, n_cycles: int = 10):
 
 # ---------------------------------------------------------------- chip path
 
-class ChipRBM(NamedTuple):
-    fwd: CIMLayer     # (V+1, H+1) direction v->h
-    bwd: CIMLayer     # (H+1, V+1) — same cells, transposed TNSA access
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ChipRBM:
+    """The RBM's served chip artifact (built by `models/nn.deploy_rbm_cim`):
+    ONE bidirectionally-compiled chip plus the static geometry the Gibbs
+    loop needs.
+
+    chip:  `core.cim.CompiledChip` compiled with directions=("fwd","bwd");
+           the single matrix "rbm" is the (padded, optionally
+           pixel-interleaved) augmented (V+1, H+1) array.
+    perm / inv_perm: visible-row permutation of the pixel-interleaved
+           mapping (None when interleave was off): fwd inputs are gathered
+           by `perm` before the dispatch, bwd outputs scattered back by
+           `inv_perm` — both inside the serving jit.
+    n_pad: padded visible+bias row count (== n_vis + 1 without interleave).
+    """
+    chip: CompiledChip
+    perm: Optional[jax.Array]
+    inv_perm: Optional[jax.Array]
+    n_vis: int
+    n_hid: int
+    n_pad: int
+
+    def tree_flatten(self):
+        return ((self.chip, self.perm, self.inv_perm),
+                (self.n_vis, self.n_hid, self.n_pad))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], *aux)
 
 
 def _augmented(params):
@@ -99,26 +156,6 @@ def _augmented(params):
     return w_aug
 
 
-def deploy(key, params, cfg: CIMConfig, v_cal, mode: str = "relaxed"
-           ) -> ChipRBM:
-    """Program the augmented array once; build fwd and bwd calibrated views."""
-    w_aug = _augmented(params)
-    k1, k2, k3 = jax.random.split(key, 3)
-    fwd = cim_api.program(k1, w_aug, cfg, in_alpha=1.0,
-                          x_cal=_aug_v(v_cal), mode=mode)
-    # The bwd view reuses the SAME programmed cells, transposed (TNSA):
-    g_pos_t, g_neg_t = fwd.g_pos.T, fwd.g_neg.T
-    norm_t = jnp.sum(g_pos_t + g_neg_t, axis=0)
-    # calibrate the bwd direction on hidden samples from a software pass
-    ph = jax.nn.sigmoid(v_cal @ params["w"] + params["b"])
-    h_cal = (ph > 0.5).astype(jnp.float32)
-    h_int, _ = quantize_to_int(_aug_h(h_cal), 1.0, cfg.in_bits, signed=True)
-    cal = calibrate_layer(k3, h_int, g_pos_t, g_neg_t, cfg)
-    bwd = CIMLayer(g_pos_t, g_neg_t, fwd.w_max, norm_t, cal.v_decr,
-                   cal.adc_offset, jnp.asarray(1.0))
-    return ChipRBM(fwd, bwd)
-
-
 def _aug_v(v):
     return jnp.concatenate([v, jnp.ones((v.shape[0], 1))], axis=-1)
 
@@ -127,23 +164,73 @@ def _aug_h(h):
     return jnp.concatenate([h, jnp.ones((h.shape[0], 1))], axis=-1)
 
 
-def chip_gibbs_recover(key, chip: ChipRBM, cfg: CIMConfig, v_corrupt,
-                       mask_known, n_cycles: int = 10):
-    """Image recovery fully through the chip datapath (both MVM directions)."""
-    n_hid = chip.fwd.g_pos.shape[1] - 1
-    n_vis = chip.fwd.g_pos.shape[0] - 1
-    v = v_corrupt
-    pv = v_corrupt
-    for i in range(n_cycles):
+def chip_gibbs_recover(key, crbm: ChipRBM, v_corrupt, mask_known,
+                       n_cycles: int = 10, *, stochastic: bool = False,
+                       seed0: int = 0):
+    """Image recovery fully through the chip datapath — a jit'd, batched
+    `lax.scan` over Gibbs cycles, each alternating the packed FWD (v->h,
+    SL->BL) and transpose-direction BWD (h->v, BL->SL) Pallas dispatches of
+    ONE compiled chip, with uncorrupted pixels clamped between cycles.
+
+    stochastic=True samples the h->v half-step with the chip's stochastic
+    neurons (LFSR comparator bits off the packed dispatch) instead of a
+    digital Bernoulli draw; requires the hidden space to fit one input
+    block (no bit-summing across input splits).
+
+    Returns the (n_cycles, B, n_vis) trajectory of recovered visible
+    probabilities (comparator bit samples when stochastic) — entry [-1] is
+    the final reconstruction; per-cycle L2 curves come for free.
+    """
+    return _chip_gibbs_scan(key, crbm, v_corrupt, mask_known,
+                            jnp.asarray(seed0, jnp.int32), n_cycles,
+                            stochastic)
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6))
+def _chip_gibbs_scan(key, crbm, v_corrupt, mask_known, seed0, n_cycles,
+                     stochastic):
+    cfg = crbm.chip.cfg
+    fwd = crbm.chip.layers["rbm"]
+    bwd = crbm.chip.layers_for("bwd")["rbm"]
+    # stochastic sampling needs the hidden space to fit one input block;
+    # packed_forward enforces it (comparator bits cannot be summed)
+    cfg_st = dataclasses.replace(cfg, activation="stochastic")
+    n_vis, n_hid, n_pad = crbm.n_vis, crbm.n_hid, crbm.n_pad
+
+    def to_chip(v):
+        """(B, n_vis) -> the fwd dispatch's (B, n_pad) padded/permuted
+        drive vector (visible units + always-on bias unit)."""
+        x = _aug_v(v)
+        if n_pad > x.shape[1]:
+            x = jnp.pad(x, ((0, 0), (0, n_pad - x.shape[1])))
+        return x[:, crbm.perm] if crbm.perm is not None else x
+
+    def from_chip(y):
+        """(B, n_pad) bwd outputs -> (B, n_vis) logical visible units."""
+        y = y[:, crbm.inv_perm] if crbm.inv_perm is not None else y
+        return y[:, :n_vis]
+
+    def cycle(v, i):
         kh, kv = jax.random.split(jax.random.fold_in(key, i))
-        logits_h = cim_api.forward(chip.fwd, _aug_v(v), cfg, seed=2 * i)[:, :n_hid]
-        h = jax.random.bernoulli(kh, jax.nn.sigmoid(logits_h)).astype(jnp.float32)
-        logits_v = cim_api.forward(chip.bwd, _aug_h(h), cfg,
-                                   seed=2 * i + 1)[:, :n_vis]
-        pv = jax.nn.sigmoid(logits_v)
-        v = jax.random.bernoulli(kv, pv).astype(jnp.float32)
-        v = jnp.where(mask_known, v_corrupt, v)
-    return pv
+        logits_h = packed_forward(fwd, to_chip(v), cfg,
+                                  seed=seed0 + 2 * i)[:, :n_hid]
+        h = jax.random.bernoulli(
+            kh, jax.nn.sigmoid(logits_h)).astype(jnp.float32)
+        hb = _aug_h(h)
+        if stochastic:
+            pv = from_chip(packed_forward(bwd, hb, cfg_st,
+                                          seed=seed0 + 2 * i + 1))
+            v_new = pv                      # comparator bits ARE the sample
+        else:
+            logits_v = from_chip(packed_forward(bwd, hb, cfg,
+                                                seed=seed0 + 2 * i + 1))
+            pv = jax.nn.sigmoid(logits_v)
+            v_new = jax.random.bernoulli(kv, pv).astype(jnp.float32)
+        v_new = jnp.where(mask_known, v_corrupt, v_new)
+        return v_new, pv
+
+    _, pvs = jax.lax.scan(cycle, v_corrupt, jnp.arange(n_cycles))
+    return pvs
 
 
 def l2_error(v_rec, v_orig):

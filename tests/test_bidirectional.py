@@ -1,0 +1,372 @@
+"""Bidirectional chip execution: transpose-direction compiled chips, packed
+stochastic sampling, and the RBM deploy built on them.
+
+Equivalence contract (DESIGN.md 'Bidirectional'): on exact modes the
+transpose-direction packed dispatch is BITWISE equal to the transposed
+per-tile loop executor — ADC counts are integer-valued f32, so digital
+accumulation is exact in any slot order — including split, scheduled
+(merged-core) and IR-drop-split plans. One programmed conductance set backs
+both directions: the transpose pack shares the forward gd_tiles stack by
+reference (object identity, not just value equality).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container — deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+import repro.core as core
+from repro.core.types import CIMConfig, CoreSpec, NonIdealityConfig
+from repro.core.cim import CIMEngine, packed_forward
+from repro.core.conductance import weights_to_conductances
+from repro.core.mapping import (MatrixReq, Plan, Tile, ir_drop_max_cols,
+                                multicore_mvm, multicore_mvm_packed,
+                                pack_tiles, pack_tiles_transposed,
+                                plan_layers, schedule_tiles, transpose_tiles)
+from repro.kernels.cim_mvm.ops import cim_mvm
+
+
+def _cim_case(rows, cols, seed, b=4):
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (rows, cols)) * 0.1
+    cond = weights_to_conductances(w, cfg.device)
+    x_bwd = jax.random.randint(jax.random.fold_in(k, 1), (b, cols), -7, 8)
+    return cfg, cond, x_bwd
+
+
+def _loop_counts_T(x_bwd, cond, tiles, vd, cfg):
+    """The transposed per-tile loop executor: the same physical tiles read
+    in the BL->SL direction, one cim_mvm per tile over the transposed
+    conductance slices, partial sums accumulated digitally."""
+    gpT, gnT = cond.g_pos.T, cond.g_neg.T
+
+    def matmul_fn(xt, _wt, t):
+        gp = jax.lax.dynamic_slice(gpT, (t.row0, t.col0), (t.rows, t.cols))
+        gn = jax.lax.dynamic_slice(gnT, (t.row0, t.col0), (t.rows, t.cols))
+        return cim_mvm(xt, gp, gn, vd, cfg)
+
+    return multicore_mvm(x_bwd, gpT - gnT, transpose_tiles(tiles), matmul_fn)
+
+
+def _packed_T(tiles, cond, vd, schedule=None):
+    packed = pack_tiles(tiles, cond.g_pos - cond.g_neg,
+                        gsum=cond.g_pos + cond.g_neg, v_decr=vd,
+                        schedule=schedule)
+    return packed, pack_tiles_transposed(
+        tiles, packed, gsum=cond.g_pos + cond.g_neg, v_decr=vd,
+        schedule=schedule)
+
+
+# ------------------------------------------- transpose-direction equivalence
+
+@settings(max_examples=6, deadline=None)
+@given(r=st.integers(40, 300), c=st.integers(40, 600),
+       n_cores=st.integers(1, 4), seed=st.integers(0, 99))
+def test_transposed_packed_matches_loop_bitwise(r, c, n_cores, seed):
+    """Property: the transpose-direction packed dispatch == the transposed
+    per-tile loop executor, bitwise, on exact modes — across random shapes
+    forced onto tiny chips (split AND merged/scheduled plans)."""
+    try:
+        plan = plan_layers([MatrixReq("m", r, c)], CoreSpec(n_cores=n_cores))
+    except ValueError:
+        return          # unmergeable onto this tiny chip (planner contract)
+    tiles = plan.tiles_for("m")
+    cfg, cond, x_bwd = _cim_case(r, c, seed)
+    _, packedT = _packed_T(tiles, cond, 0.002,
+                           schedule=schedule_tiles(tiles))
+    y = multicore_mvm_packed(x_bwd, packedT, cfg)
+    y_loop = _loop_counts_T(x_bwd, cond, tiles, 0.002, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_loop))
+
+
+@settings(max_examples=4, deadline=None)
+@given(r=st.integers(20, 200), c=st.integers(20, 400),
+       seed=st.integers(0, 99))
+def test_transposed_ir_drop_split_matches_loop_bitwise(r, c, seed):
+    """IR-drop vertical column splits stay bitwise-equal when read in the
+    transpose direction (the splits become input splits there)."""
+    cfg_ir = CIMConfig(in_bits=4, out_bits=8,
+                       nonideal=NonIdealityConfig(ir_drop_alpha=2e-7))
+    cap = ir_drop_max_cols(cfg_ir)
+    plan = plan_layers([MatrixReq("m", r, c)], max_cols_per_core=cap)
+    tiles = plan.tiles_for("m")
+    cfg, cond, x_bwd = _cim_case(r, c, seed)
+    _, packedT = _packed_T(tiles, cond, 0.002,
+                           schedule=schedule_tiles(tiles))
+    y = multicore_mvm_packed(x_bwd, packedT, cfg)
+    y_loop = _loop_counts_T(x_bwd, cond, tiles, 0.002, cfg)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_loop))
+
+
+def test_transposed_identity_matches_matmul():
+    """Raw-matmul transpose pack (no CIM epilogue) computes x @ W.T."""
+    plan = plan_layers([MatrixReq("m", 200, 500)], CoreSpec(n_cores=2))
+    tiles = plan.tiles_for("m")
+    k = jax.random.PRNGKey(3)
+    w = jax.random.normal(k, (200, 500))
+    x = jax.random.normal(jax.random.fold_in(k, 1), (4, 500))
+    sched = schedule_tiles(tiles)
+    packed = pack_tiles(tiles, w, schedule=sched)
+    packedT = pack_tiles_transposed(tiles, packed, schedule=sched)
+    assert packedT.transpose and packedT.n_rows == 500
+    y = multicore_mvm_packed(x, packedT)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T),
+                               rtol=2e-4, atol=1e-3)
+
+
+def test_transposed_pack_requires_matching_forward_pack():
+    tiles = plan_layers([MatrixReq("m", 100, 60)]).tiles_for("m")
+    w = jnp.ones((100, 60))
+    packed = pack_tiles(tiles, w)
+    with pytest.raises(ValueError, match="forward"):
+        pack_tiles_transposed(tiles, pack_tiles_transposed(tiles, packed))
+    other = plan_layers([MatrixReq("m", 300, 500)],
+                        CoreSpec(n_cores=3)).tiles_for("m")
+    with pytest.raises(ValueError, match="do not match"):
+        pack_tiles_transposed(other, packed,
+                              schedule=schedule_tiles(other))
+
+
+# -------------------------------------------------- one array, two views
+
+def test_bidirectional_chip_shares_conductances():
+    """compile_chip(directions=('fwd','bwd')): ONE programmed array, two
+    packed views — gd_tiles stacks and conductance arrays are the same
+    objects (shared by reference, no transposed copy)."""
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (300, 120))
+    chip = core.compile_chip(jax.random.PRNGKey(1), {"a": w}, cfg,
+                             mode="ideal", in_alpha=2.0,
+                             directions=("fwd", "bwd"), in_alpha_bwd=2.0)
+    fwd, bwd = chip.layers["a"], chip.bwd_layers["a"]
+    assert bwd.packed.gd_tiles is fwd.packed.gd_tiles
+    assert bwd.layer.g_pos is fwd.layer.g_pos
+    assert bwd.layer.g_neg is fwd.layer.g_neg
+    # per-direction calibration: the bwd ADC steps come from the bwd
+    # distribution and differ from the fwd ones
+    assert bwd.packed.transpose and not fwd.packed.transpose
+    assert bwd.packed.v_decr_tiles.shape == fwd.packed.v_decr_tiles.shape
+    assert not np.allclose(np.asarray(bwd.packed.v_decr_tiles),
+                           np.asarray(fwd.packed.v_decr_tiles))
+    assert chip.directions == ("fwd", "bwd")
+    # fwd-only chips refuse the bwd direction explicitly
+    chip_f = core.compile_chip(jax.random.PRNGKey(1), {"a": w}, cfg,
+                               mode="ideal", in_alpha=2.0)
+    assert chip_f.directions == ("fwd",)
+    with pytest.raises(ValueError, match="directions"):
+        chip_f.layers_for("bwd")
+
+
+def test_engine_bidirectional_forward():
+    """CIMEngine serves both directions of one chip: fwd ~ x @ W and
+    bwd ~ x @ W.T, each through one packed Pallas dispatch."""
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (300, 120))
+    eng = CIMEngine(cfg, mode="ideal")
+    eng.program(jax.random.PRNGKey(1), {"a": w}, in_alpha=2.0,
+                directions=("fwd", "bwd"), in_alpha_bwd=2.0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 300))
+    xb = jax.random.normal(jax.random.PRNGKey(3), (8, 120))
+    y = eng.forward("a", x)
+    yb = eng.forward("a", xb, direction="bwd")
+    cf = np.corrcoef(np.asarray(y).ravel(),
+                     np.asarray(jnp.clip(x, -2, 2) @ w).ravel())[0, 1]
+    cb = np.corrcoef(np.asarray(yb).ravel(),
+                     np.asarray(jnp.clip(xb, -2, 2) @ w.T).ravel())[0, 1]
+    assert cf > 0.95 and cb > 0.95
+
+
+def test_bidirectional_chip_rides_through_jit():
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (100, 40))
+    chip = core.compile_chip(jax.random.PRNGKey(1), {"a": w}, cfg,
+                             mode="ideal", directions=("fwd", "bwd"))
+    xb = jax.random.normal(jax.random.PRNGKey(2), (2, 40))
+    f = jax.jit(lambda c, xx: packed_forward(c.bwd_layers["a"], xx, cfg))
+    np.testing.assert_array_equal(np.asarray(f(chip, xb)),
+                                  np.asarray(f(chip, xb)))
+
+
+# -------------------------------------------------- packed stochastic neurons
+
+def test_packed_stochastic_fixed_seed_deterministic():
+    """The packed stochastic-activation (LFSR comparator-bit) path is
+    deterministic in the seed — same seed, same bits; new seed, new bits —
+    in both directions. The serving dispatch (packed_forward) only accepts
+    single-input-block directions (bits cannot be summed across splits);
+    the raw executor keeps summed-bit semantics for parity studies."""
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    cfg_st = dataclasses.replace(cfg, activation="stochastic")
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (300, 120))
+    chip = core.compile_chip(jax.random.PRNGKey(1), {"a": w}, cfg,
+                             mode="ideal", in_alpha=2.0,
+                             directions=("fwd", "bwd"), in_alpha_bwd=2.0)
+    # bwd: hidden space fits one input block -> pure comparator bits
+    xb = jax.random.normal(jax.random.PRNGKey(3), (8, 120))
+    b1 = packed_forward(chip.bwd_layers["a"], xb, cfg_st, seed=5)
+    b2 = packed_forward(chip.bwd_layers["a"], xb, cfg_st, seed=5)
+    b3 = packed_forward(chip.bwd_layers["a"], xb, cfg_st, seed=6)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    assert (np.asarray(b1) != np.asarray(b3)).any()
+    assert set(np.unique(np.asarray(b1))) <= {0.0, 1.0}
+    # fwd: 3 input splits -> the serving dispatch refuses (summed bits are
+    # not Bernoulli samples) ...
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 300))
+    with pytest.raises(ValueError, match="comparator bits"):
+        packed_forward(chip.layers["a"], x, cfg_st, seed=5)
+    # ... while the raw executor keeps the loop-parity summed semantics,
+    # still seed-deterministic
+    p = chip.layers["a"].packed
+    r1 = multicore_mvm_packed(jnp.round(x), p, cfg_st, seed=5)
+    r2 = multicore_mvm_packed(jnp.round(x), p, cfg_st, seed=5)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_packed_stochastic_saturates_to_sign():
+    """|Q| beyond the LFSR noise swing (v_decr * N_max) makes the
+    comparator bit deterministic = sign — the hard-sigmoid tails."""
+    tiles = plan_layers([MatrixReq("m", 64, 32)]).tiles_for("m")
+    cfg_st = CIMConfig(in_bits=4, out_bits=8, activation="stochastic")
+    w = jnp.full((64, 32), 0.5)
+    cond = weights_to_conductances(w, cfg_st.device)
+    packed = pack_tiles(tiles, cond.g_pos - cond.g_neg,
+                        gsum=cond.g_pos + cond.g_neg, v_decr=1e-4)
+    x_pos = jnp.full((4, 64), 7.0)
+    x_neg = -x_pos
+    bits_p = multicore_mvm_packed(x_pos, packed, cfg_st, seed=3)
+    bits_n = multicore_mvm_packed(x_neg, packed, cfg_st, seed=3)
+    np.testing.assert_array_equal(np.asarray(bits_p), 1.0)
+    np.testing.assert_array_equal(np.asarray(bits_n), 0.0)
+
+
+def test_stochastic_config_servable_by_engine():
+    """activation='stochastic' is no longer oracle-only: CIMEngine accepts
+    it (the packed kernels carry the hash-PRNG LFSR analogue)."""
+    cfg = CIMConfig(in_bits=4, out_bits=8, activation="stochastic")
+    eng = CIMEngine(cfg, mode="ideal")     # used to raise ValueError
+    eng.program(jax.random.PRNGKey(0),
+                {"a": 0.1 * jax.random.normal(jax.random.PRNGKey(1),
+                                              (64, 32))})
+    bits = eng.forward("a", jnp.ones((2, 64)))
+    assert set(np.unique(np.asarray(bits))) <= {0.0, 1.0}
+
+
+# ------------------------------------------------------- RBM deploy surface
+
+def test_compile_chip_plan_override_validated():
+    cfg = CIMConfig(in_bits=4, out_bits=8)
+    w = 0.1 * jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    bad = Plan(tiles=[Tile("a", 0, 0, 32, 32, core=0)], n_cores_used=1,
+               duplicated={}, merged=[])
+    with pytest.raises(ValueError, match="covers"):
+        core.compile_chip(jax.random.PRNGKey(1), {"a": w}, cfg,
+                          mode="ideal", plan=bad)
+    with pytest.raises(ValueError, match="no tiles"):
+        core.compile_chip(jax.random.PRNGKey(1), {"b": w}, cfg,
+                          mode="ideal", plan=bad)
+
+
+def test_rbm_interleave_mapping():
+    """deploy_rbm_cim(interleave=True): core k holds the strided unit
+    subset {k, k+n_cores, ...} (paper Fig. 4f down-sampling), the plan is
+    a valid compile_chip stage-1 override, and the Gibbs loop recovers
+    through it end-to-end."""
+    from repro.data import binary_patterns, corrupt_flip
+    from repro.models import nn, rbm
+    pix, nv, nh = 48, 58, 12
+    params = rbm.init(jax.random.PRNGKey(0), n_vis=nv, n_hid=nh)
+    v = binary_patterns(jax.random.PRNGKey(1), 32, d=pix, rank=3)
+    spec = CoreSpec(rows=32)               # row_cap 16 -> several cores
+    cfg = CIMConfig(in_bits=2, out_bits=8)
+    crbm = nn.deploy_rbm_cim(jax.random.PRNGKey(2), params, cfg, v,
+                             mode="ideal", interleave=True, spec=spec)
+    n_blocks = len({t.row0 for t in crbm.chip.plan.tiles})
+    assert n_blocks > 1
+    bs = crbm.n_pad // n_blocks
+    perm = np.asarray(crbm.perm)
+    for blk in range(n_blocks):
+        units = perm[blk * bs:(blk + 1) * bs]
+        assert set(units % n_blocks) == {blk}        # strided downsample
+    # round trip: inv_perm undoes perm
+    np.testing.assert_array_equal(perm[np.asarray(crbm.inv_perm)],
+                                  np.arange(crbm.n_pad))
+    v_c, mask = corrupt_flip(jax.random.PRNGKey(3), v, 0.2, pixels=pix)
+    traj = rbm.chip_gibbs_recover(jax.random.PRNGKey(4), crbm, v_c, mask,
+                                  n_cycles=2)
+    assert traj.shape == (2, 32, nv)
+    assert np.isfinite(np.asarray(traj)).all()
+
+
+def test_rbm_interleave_respects_ir_drop_cap():
+    """The interleaved custom plan owns plan_chip's constraints: with
+    ir_drop_alpha set, its column blocks stay under ir_drop_max_cols."""
+    from repro.data import binary_patterns
+    from repro.models import nn, rbm
+    pix, nv, nh = 48, 58, 12
+    params = rbm.init(jax.random.PRNGKey(0), n_vis=nv, n_hid=nh)
+    v = binary_patterns(jax.random.PRNGKey(1), 16, d=pix, rank=3)
+    spec = CoreSpec(rows=32)
+    cfg = CIMConfig(in_bits=2, out_bits=8,
+                    nonideal=NonIdealityConfig(ir_drop_alpha=1e-5))
+    cap = ir_drop_max_cols(cfg, spec)
+    assert cap < nh + 1                   # the cap actually binds here
+    crbm = nn.deploy_rbm_cim(jax.random.PRNGKey(2), params, cfg, v,
+                             mode="ideal", interleave=True, spec=spec)
+    assert max(t.cols for t in crbm.chip.plan.tiles) <= cap
+    traj = rbm.chip_gibbs_recover(jax.random.PRNGKey(3), crbm, v,
+                                  jnp.ones_like(v, bool), n_cycles=1)
+    assert np.isfinite(np.asarray(traj)).all()
+
+
+def test_rbm_deploy_matches_unpermuted_logits():
+    """The interleaved fwd dispatch computes the SAME v->h logits as the
+    un-interleaved deploy (the permutation is transparent end-to-end)."""
+    from repro.data import binary_patterns
+    from repro.models import nn, rbm
+    pix, nv, nh = 48, 58, 12
+    params = rbm.init(jax.random.PRNGKey(0), n_vis=nv, n_hid=nh)
+    v = binary_patterns(jax.random.PRNGKey(1), 16, d=pix, rank=3)
+    cfg = CIMConfig(in_bits=2, out_bits=8)
+    spec = CoreSpec(rows=32)
+    kws = dict(mode="ideal", spec=spec)
+    plain = nn.deploy_rbm_cim(jax.random.PRNGKey(2), params, cfg, v, **kws)
+    inter = nn.deploy_rbm_cim(jax.random.PRNGKey(2), params, cfg, v,
+                              interleave=True, **kws)
+    t_p = rbm.chip_gibbs_recover(jax.random.PRNGKey(5), plain, v,
+                                 jnp.ones_like(v, bool), n_cycles=1)
+    t_i = rbm.chip_gibbs_recover(jax.random.PRNGKey(5), inter, v,
+                                 jnp.ones_like(v, bool), n_cycles=1)
+    # same weights, same inputs; per-core ADC steps differ (different tile
+    # distributions), so probabilities agree closely but not bitwise
+    np.testing.assert_allclose(np.asarray(t_p), np.asarray(t_i), atol=0.2)
+    c = np.corrcoef(np.asarray(t_p).ravel(), np.asarray(t_i).ravel())[0, 1]
+    assert c > 0.95
+
+
+# ------------------------------------------------------ compat-wrapper audit
+
+def test_compat_wrappers_have_no_serving_callers():
+    """`core.cim.program`/`forward` are compat-only: models/rbm.py is fully
+    off them, and the only in-tree callers are the sanctioned per-layer
+    oracle path in models/nn.py (ChipLinear, for per-phase non-idealities
+    the packed path cannot serve)."""
+    import pathlib
+    src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    offenders = {}
+    for py in src.rglob("*.py"):
+        text = py.read_text()
+        hits = [pat for pat in ("cim_api.program(", "cim_api.forward(",
+                                "cim.program(", "cim.forward(")
+                if pat in text]
+        if hits:
+            offenders[str(py.relative_to(src))] = hits
+    assert set(offenders) <= {"models/nn.py"}, offenders
+    rbm_text = (src / "models" / "rbm.py").read_text()
+    assert "cim_api" not in rbm_text

@@ -8,10 +8,13 @@
 # The fast tier is the pre-commit loop: kernels, planner/scheduler/packing,
 # engine, models, distributed — followed by a bench-smoke that runs
 # benchmarks/bench_mapping.py in quick mode and records the executor
-# timings to BENCH_mapping.json (the perf trajectory), and a serve-smoke
+# timings to BENCH_mapping.json (the perf trajectory), a serve-smoke
 # that end-to-end serves the recurrent archs (rwkv6 + zamba2) through the
 # packed CIM path on tiny configs (the arch-dispatch + deploy_recurrent_cim
-# regression guard). The bench gate is split by determinism: the
+# regression guard), and a recover-smoke that serves the bidirectional RBM
+# image-recovery workload (packed fwd + transpose-direction dispatches of
+# one compiled chip; >=50% L2-error reduction enforced by the driver).
+# The bench gate is split by determinism: the
 # one-trace-per-plan contract always fails the run, while the "scheduled no
 # slower than 2x packed on unmerged plans" wall-clock ratio is a warning in
 # the fast tier (shared CI machines make timing gates flaky) and only
@@ -37,12 +40,20 @@ serve_smoke() {
     --batch 2 --prompt-len 8 --gen 3
 }
 
+recover_smoke() {
+  echo "== recover-smoke: bidirectional RBM image recovery =="
+  # packed fwd + transpose-direction bwd dispatches of ONE compiled chip;
+  # the driver itself fails the run below 50% L2-error reduction
+  python -m repro.launch.recover --smoke
+}
+
 tier="${1:-fast}"
 case "$tier" in
   fast)
     python -m pytest -q -m "not slow"
     bench_smoke
     serve_smoke
+    recover_smoke
     ;;
   full) exec python -m pytest -x -q ;;
   bench) bench_smoke --enforce-timing ;;
