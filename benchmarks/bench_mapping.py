@@ -10,7 +10,11 @@ recurrent-stack entry: an rwkv6 layer's eight projections compiled as one
 chip and served packed, timed against the float matmuls they replace — and
 a bidirectional entry: the RBM's jit'd packed Gibbs scan (one compiled
 chip, alternating fwd + transpose-direction dispatches) timed against the
-per-matrix compat loop it replaced (gibbs_packed_* vs gibbs_compat_*). The
+per-matrix compat loop it replaced (gibbs_packed_* vs gibbs_compat_*) —
+and real-mesh TP rows (mesh_shardmap_* vs mesh_unrolled_*): one TP-sharded
+projection's forward through the device-resident shard_map executor vs the
+unrolled in-process shard loop, measured in a child process on 8 forced
+host devices (bench_mesh_child.py, bitwise parity asserted there). The
 derived column reports how many kernel jit traces the executor cost — every
 packed path's headline is ONE trace/dispatch per plan regardless of tile
 count. That trace-count contract is deterministic and always enforced; the
@@ -25,6 +29,10 @@ CLI (the CI bench-smoke step):
 """
 import argparse
 import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -228,7 +236,29 @@ def run(quick: bool = False):
     us_compat = _time(compat_loop, n_rep)
     out.append((f"gibbs_packed_rbm_c{cycles}", round(us_gibbs, 1), tr))
     out.append((f"gibbs_compat_rbm_c{cycles}", round(us_compat, 1), 0))
+    out.extend(_mesh_rows())
     return out
+
+
+def _mesh_rows():
+    """Real-mesh TP serving rows: shard_map vs unrolled executors for one
+    TP-sharded projection stack, measured in a CHILD process on 8 forced
+    host devices (bench_mesh_child.py). A subprocess because the forced
+    device count must precede jax init, and this process's single-device
+    rows must keep their real backend for run-to-run comparability. The
+    child asserts shard_map/unrolled bitwise parity before timing."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = str(repo / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, str(repo / "benchmarks" / "bench_mesh_child.py")],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise SystemExit("bench_mesh_child failed:\n" + proc.stderr[-4000:])
+    return [tuple(r) for r in
+            json.loads(proc.stdout.strip().splitlines()[-1])]
 
 
 def main(argv=None):
@@ -254,9 +284,12 @@ def main(argv=None):
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {args.out}")
     # deterministic contract (always enforced): every packed/scheduled
-    # executor costs exactly ONE kernel trace per plan shape
+    # executor costs exactly ONE kernel trace per plan shape — the
+    # shard_map executor included (its whole per-shard dispatch traces
+    # once inside the shard_map body)
     for name, _, tr in rows:
-        if name.startswith(("mapping_packed_", "mapping_sched_")) and tr != 1:
+        if name.startswith(("mapping_packed_", "mapping_sched_",
+                            "mesh_shardmap_")) and tr != 1:
             raise SystemExit(
                 f"packed-executor trace contract broken on {name}: "
                 f"{tr} traces (expected 1)")

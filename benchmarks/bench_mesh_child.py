@@ -1,0 +1,90 @@
+"""Child process for benchmarks/bench_mapping.py: shard_map-vs-unrolled
+TP serving rows on 8 forced host devices.
+
+Spawned by `bench_mapping.run()` with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the flag must precede
+jax init, and the parent bench must keep its real device count so the
+single-device executor timings stay comparable across runs). Prints one
+JSON list of [name, us_per_call, traces] rows on stdout.
+
+Times one projection stack's TP forward both ways — the unrolled
+in-process shard loop (`nn.sharded_packed_loop`, one packed dispatch per
+shard inside one jit) against the device-resident shard_map executor
+(`nn.sharded_packed_forward(mesh=...)`) — for a column-parallel (wq) and a
+row-parallel (wo) projection, and asserts the two are bitwise-equal before
+reporting (a benchmark of a wrong executor is worse than no row).
+"""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+import repro.models.nn as nn
+import repro.models.transformer as T
+from repro.kernels.cim_mvm.kernel import TRACE_COUNTS
+from repro.launch.mesh import serving_mesh
+
+
+def _time(fn, n=5):
+    fn()  # compile
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        best = min(best, time.time() - t0)
+    return best * 1e6
+
+
+def main():
+    mesh = serving_mesh()
+    n_sh = dict(mesh.shape)["model"]
+    cfg = configs.get("gemma2-9b", smoke=True).replace(
+        dtype=jnp.float32, cim_mode="packed", n_layers=1)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    p = nn.deploy_transformer_cim(jax.random.PRNGKey(7), params, cfg,
+                                  mode="ideal", mesh=mesh)
+    ccfg = nn.arch_cim_config(cfg)
+    rows = []
+    for name in ("wq", "wo"):
+        spl = p["layers"][name + "_cim"]
+        shards0 = jax.tree_util.tree_map(lambda a: a[0], spl.shards)
+        part, nsh = spl.partition, spl.n_shards
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (16, params["layers"][name].shape[1]))
+        f_loop = jax.jit(lambda s, xx, part=part, nsh=nsh:
+                         nn.sharded_packed_loop(
+                             nn.ShardedPackedLayer(s, part, nsh), xx, ccfg))
+        f_mesh = jax.jit(lambda s, xx, part=part, nsh=nsh:
+                         nn.sharded_packed_forward(
+                             nn.ShardedPackedLayer(s, part, nsh), xx, ccfg,
+                             mesh=mesh))
+        # trace counters bracket the FIRST call of each executor (the
+        # compile); the bitwise gate reuses those compiled results. The
+        # shard_map path goes first: the kernel jit cache is
+        # process-global and both executors dispatch identical per-shard
+        # plan shapes, so whichever runs second hits the first's trace
+        t0 = TRACE_COUNTS["cim_mvm_packed"] + TRACE_COUNTS["cim_mvm_scheduled"]
+        y_mesh = np.asarray(f_mesh(shards0, x))
+        tr_mesh = (TRACE_COUNTS["cim_mvm_packed"]
+                   + TRACE_COUNTS["cim_mvm_scheduled"]) - t0
+        t0 = TRACE_COUNTS["cim_mvm_packed"] + TRACE_COUNTS["cim_mvm_scheduled"]
+        y_loop = np.asarray(f_loop(shards0, x))
+        tr_loop = (TRACE_COUNTS["cim_mvm_packed"]
+                   + TRACE_COUNTS["cim_mvm_scheduled"]) - t0
+        if not (y_loop == y_mesh).all():
+            raise SystemExit(f"shard_map != unrolled on {name} — refusing "
+                             "to record timings for a broken executor")
+        us_loop = _time(lambda: f_loop(shards0, x))
+        us_mesh = _time(lambda: f_mesh(shards0, x))
+        rows.append([f"mesh_unrolled_{name}_{part}_s{n_sh}",
+                     round(us_loop, 1), tr_loop])
+        rows.append([f"mesh_shardmap_{name}_{part}_s{n_sh}",
+                     round(us_mesh, 1), tr_mesh])
+    print(json.dumps(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -534,10 +534,17 @@ class CIMEngine:
     the packed path; such configs raise — use the per-layer `forward` demo
     path instead. IR drop IS servable: the planner bounds columns per core
     so the droop stays within calibration tolerance.
+
+    device: optional jax.Device (or Sharding) the compiled chip is placed
+    on at PROGRAM time — the single-chip analogue of the mesh-resident TP
+    deploy (models/nn.deploy_transformer_cim(mesh=...)): chip state lives
+    where it executes, and per-request forwards never move conductances.
+    None keeps jax's default placement.
     """
 
     def __init__(self, cfg: CIMConfig, spec: CoreSpec = CoreSpec(),
-                 mode: str = "relaxed", interpret: Optional[bool] = None):
+                 mode: str = "relaxed", interpret: Optional[bool] = None,
+                 device=None):
         if _oracle_only(cfg):
             raise ValueError(
                 "CIMEngine serves the fused kernel path only; per-phase "
@@ -546,6 +553,7 @@ class CIMEngine:
         self.spec = spec
         self.mode = mode
         self.interpret = interpret
+        self.device = device
         self.chip: Optional[CompiledChip] = None
         # seed is a traced SMEM input, so per-call seeds never retrace
         # (matters for stochastic-activation sampling, where every Gibbs
@@ -571,13 +579,17 @@ class CIMEngine:
                 x_cal_bwd: Optional[Dict[str, jax.Array]] = None) -> Plan:
         """Compile `weights` into a fresh CompiledChip (re-programming
         discards the old chip state). See `compile_chip`; with
-        directions=("fwd", "bwd") every matrix also serves transposed."""
+        directions=("fwd", "bwd") every matrix also serves transposed.
+        With `device` set on the engine, the chip is device_put there
+        once, here — deploy-time placement, not per-call transfer."""
         self.chip = compile_chip(key, weights, self.cfg, self.spec,
                                  self.mode, reqs=reqs, plan=plan,
                                  in_alpha=in_alpha, x_cal=x_cal,
                                  directions=directions,
                                  in_alpha_bwd=in_alpha_bwd,
                                  x_cal_bwd=x_cal_bwd)
+        if self.device is not None:
+            self.chip = jax.device_put(self.chip, self.device)
         return self.chip.plan
 
     def forward(self, name: str, x, *, direction: str = "fwd",

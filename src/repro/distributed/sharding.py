@@ -222,6 +222,36 @@ def named_shardings(mesh: Mesh, spec_tree):
         is_leaf=lambda x: isinstance(x, P))
 
 
+def packed_pspecs(shards_tree, n_shards: int, shard_axis: int = 0):
+    """PartitionSpec pytree for a `models/nn.ShardedPackedLayer.shards`
+    pytree: the shard axis (axis `shard_axis` of every array leaf — 1 for
+    deployed layer stacks whose arrays carry leading (L, n_shards) dims,
+    0 once the layer dim is stripped/scanned away) maps onto 'model';
+    every other dim is replicated. Single-engine stacks (n_shards == 1:
+    replicated 'none' projections, 1-wide meshes) replicate fully — their
+    leading 1 shard dim is not divisible by a wider model axis.
+    MoE routed-expert stacks reuse this with their (L, E, ...) chip stacks:
+    the expert dim IS the shard axis (expert parallelism, the `ew_*`
+    rule above taken to the per-expert compiled chips)."""
+    def spec(leaf):
+        parts = [None] * leaf.ndim
+        if n_shards > 1:
+            parts[shard_axis] = "model"
+        return P(*parts)
+    return jax.tree_util.tree_map(spec, shards_tree)
+
+
+def packed_shardings(mesh: Mesh, shards_tree, n_shards: int,
+                     shard_axis: int = 0):
+    """NamedSharding pytree placing a packed shard stack onto `mesh`:
+    `packed_pspecs` bound to the mesh — what the CIM deploys hand to
+    `jax.device_put` so each 'model'-axis device holds ITS shard's
+    compiled chip stack at deploy time (device-resident engines; the
+    shard_map serving path then runs without any per-call transfer)."""
+    return named_shardings(mesh,
+                           packed_pspecs(shards_tree, n_shards, shard_axis))
+
+
 def fit_pspecs(shape_tree, spec_tree, mesh: Mesh):
     """Downgrade any spec axis whose tensor dim is not divisible by the mesh
     axis product to replicated (pjit argument shardings require

@@ -24,12 +24,38 @@ def serving_mesh_shape(max_model: int = 16) -> dict:
     """{'data': D, 'model': M} factoring of the ACTUAL local device count —
     what the serving driver hands to per-shard deployments (one CIM engine
     per TP shard, models/nn.deploy_transformer_cim) instead of a hardcoded
-    {'model': 1}. The model axis takes the largest power of two that
-    divides the device count, capped at `max_model` (the production mesh's
-    TP width); the rest is data parallelism. A 1-device dev box yields
+    {'model': 1}.
+
+    Factoring rule (explicit, because it is easy to read past): the model
+    axis takes the LARGEST POWER OF TWO that divides the device count,
+    capped at `max_model` (the production mesh's TP width); everything
+    else — every odd factor included — lands on the data axis. So 8
+    devices factor as {'data': 1, 'model': 8}, 12 as {'data': 3,
+    'model': 4}, 6 as {'data': 3, 'model': 2}, and a fully odd count
+    (3, 5, 7 devices) yields {'data': n, 'model': 1}: an odd factor
+    structure silently degrades to pure data parallelism. That is
+    deliberate — per-shard chip plans require the projection dims (powers
+    of two in every assigned arch) to divide the TP width — but callers
+    who need TP must check `['model'] > 1`. A 1-device dev box yields
     {'data': 1, 'model': 1}."""
     n = jax.device_count()
     m = 1
     while m * 2 <= min(n, max_model) and n % (m * 2) == 0:
         m *= 2
     return {"data": n // m, "model": m}
+
+
+def serving_mesh(max_model: int = 16):
+    """The ACTUAL serving `Mesh` over the local devices, axes
+    ('data', 'model'), shaped by `serving_mesh_shape`'s factoring rule —
+    the one mesh builder `launch/serve.py` and the shard_map TP executor
+    (`models/nn.sharded_packed_forward`) share, so the driver stops
+    rebuilding it inline. Per-shard packed engines are placed onto it at
+    deploy time (`models/nn.deploy_transformer_cim(mesh=...)`): each
+    'model'-axis device holds its own shard's compiled chip stack and the
+    packed Pallas dispatch runs device-resident under `shard_map`, with
+    exactly one collective per projection (psum for row-parallel partial
+    sums, the out-spec all-gather for column-parallel slices)."""
+    shape = serving_mesh_shape(max_model)
+    return jax.make_mesh((shape["data"], shape["model"]),
+                         ("data", "model"))

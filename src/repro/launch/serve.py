@@ -22,10 +22,22 @@ delegate to the family dispatch in models/transformer, and deploy_cim
 picks deploy_transformer_cim vs deploy_recurrent_cim — so `--cim --arch
 rwkv6-7b` / `zamba2-7b` serve instead of dying in the dense-only
 deploy. The TP width comes from the ACTUAL serving mesh
-(launch/mesh.serving_mesh_shape): one engine per 'model'-axis shard,
-partial outputs combined inside the jit. --cim-ir-drop > 0 turns on the
-IR-drop planning constraint (vertical column splits); --cim-cores shrinks
-the per-chip core budget to force merged-core (seq-slot scheduled) plans.
+(launch/mesh.serving_mesh): one engine per 'model'-axis shard.
+
+--cim-mesh picks HOW the shards execute (real-mesh TP serving):
+'auto' (default) builds the real Mesh over the local devices, places each
+shard's compiled chip stack on its own 'model'-axis device at deploy time,
+and runs every multi-shard packed dispatch device-resident under shard_map
+— row-parallel partials meet in one lax.psum, column-parallel slices in
+the out-spec all-gather; the prefill/decode jits close over the mesh via
+cfg.cim_mesh. 'off' keeps the documented single-process unrolled shard
+loop (nn.sharded_packed_loop, the parity oracle); 'DxM' (e.g. '1x8')
+forces an explicit (data, model) mesh shape. On one device both modes
+collapse to the same single-dispatch path. Multi-device CPU smoke:
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (tools/ci.sh).
+--cim-ir-drop > 0 turns on the IR-drop planning constraint (vertical
+column splits); --cim-cores shrinks the per-chip core budget to force
+merged-core (seq-slot scheduled) plans.
 """
 from __future__ import annotations
 
@@ -60,33 +72,61 @@ def main(argv=None):
     ap.add_argument("--cim-cores", type=int, default=0,
                     help="cores per chip for --cim (0 = NeuRRAM's 48); "
                          "small values force merged-core scheduled plans")
+    ap.add_argument("--cim-mesh", default="auto",
+                    help="real-mesh TP execution for --cim: 'auto' builds "
+                         "the serving Mesh over the local devices and runs "
+                         "multi-shard dispatches under shard_map; 'off' "
+                         "keeps the unrolled in-process shard loop; 'DxM' "
+                         "(e.g. '1x8') forces a (data, model) shape")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     cfg = cfg.replace(dtype=jnp.float32 if args.smoke else cfg.dtype)
+    mesh = None
     if args.cim:
         cfg = cfg.replace(cim_mode="packed", dtype=jnp.float32,
                           cim_ir_drop=args.cim_ir_drop)
+        if args.cim_mesh == "auto":
+            from .mesh import serving_mesh
+            mesh = serving_mesh()
+        elif args.cim_mesh != "off":
+            import re
+            m_ = re.fullmatch(r"(\d+)x(\d+)", args.cim_mesh)
+            if not m_:
+                ap.error(f"--cim-mesh must be 'auto', 'off' or 'DxM' "
+                         f"(e.g. '1x8'), got {args.cim_mesh!r}")
+            mesh = jax.make_mesh((int(m_.group(1)), int(m_.group(2))),
+                                 ("data", "model"))
+        if mesh is not None:
+            # the prefill/decode jits close over cfg — and so over the mesh
+            cfg = cfg.replace(cim_mesh=mesh)
     key = jax.random.PRNGKey(0)
     sv = arch_serving(cfg)
     params = sv.init_params(key)
     if args.cim:
         from ..core.types import CoreSpec
         from .mesh import serving_mesh_shape
-        mesh_shape = serving_mesh_shape()
+        # 'off' still derives the TP width from the local device count;
+        # with a real mesh the deploy derives it from the mesh itself
+        # (models/nn._resolve_mesh) so width and placement cannot disagree
+        mesh_shape = serving_mesh_shape() if mesh is None else None
         spec = CoreSpec(n_cores=args.cim_cores) if args.cim_cores else None
         t0 = time.time()
         params = sv.deploy_cim(jax.random.PRNGKey(7), params,
                                mode=args.cim_mode, mesh_shape=mesh_shape,
                                spec=spec)
+        tp = (dict(mesh.shape)["model"] if mesh is not None
+              else mesh_shape.get("model", 1))
         n_packed = sum(1 for k in params["layers"] if k.endswith("_cim"))
         n_shared = sum(1 for k in params.get("shared_attn", {})
                        if k.endswith("_cim"))
         shared = (f" + {n_shared} shared-attn projections"
                   if n_shared else "")
+        exec_mode = ("shard_map" if mesh is not None and tp > 1
+                     else "unrolled")
         print(f"cim: compiled {n_packed} projection stacks "
               f"x {cfg.n_layers} layers{shared} ({args.cim_mode}, "
-              f"tp={mesh_shape.get('model', 1)}) "
+              f"tp={tp}, exec={exec_mode}) "
               f"in {time.time() - t0:.1f}s")
     max_len = args.prompt_len + args.gen + (cfg.vis_patches or 0)
     cache = sv.init_state(args.batch, max_len)

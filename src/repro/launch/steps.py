@@ -34,6 +34,12 @@ class ArchServing(NamedTuple):
     deploy_recurrent_cim for rwkv6/mamba2 — nn.is_recurrent_arch is the
     one predicate), so `serve --cim` works for every family instead of
     dying in the dense-only deploy with an opaque error.
+
+    Real-mesh TP serving threads through cfg, not this table: when the
+    driver sets cfg.cim_mesh (serve --cim-mesh), every prefill/decode
+    step built from cfg closes over the mesh, deploy_cim places each
+    shard's chips on its 'model'-axis device, and the packed dispatches
+    run under shard_map (models/nn.sharded_packed_forward).
     """
     init_params: Callable
     init_state: Callable

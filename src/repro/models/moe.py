@@ -49,12 +49,40 @@ def _expert_matmul(p: Dict, name: str, xe, cfg, *, seed: int = 0):
     """Batched expert matmul (E, C, d) @ (E, d, f) -> (E, C, f), routed
     through each expert's packed CIM chip when one is deployed
     (p['<name>_cim'], leading E dim) — E packed dispatches, one per
-    power-gated expert chip — and the float einsum otherwise."""
+    power-gated expert chip — and the float einsum otherwise.
+
+    With cfg.cim_mesh set (real-mesh TP serving) and E divisible by the
+    'model' axis, the expert loop runs EXPERT-PARALLEL under shard_map:
+    each device holds its E/m experts' chips (placed at deploy time,
+    expert dim on 'model') and dispatches only its own token groups; the
+    out-spec all-gather reassembles the (E, C, f) stack — the datacenter
+    rendering of the paper's power-gated core selection. Per-expert seeds
+    follow the global expert id either way, so the mesh path is
+    bitwise-equal to the unrolled loop."""
     pcl = p.get(name + "_cim")
     if pcl is None or getattr(cfg, "cim_mode", "off") != "packed":
         return jnp.einsum("ecd,edf->ecf", xe, p[name])
     from . import nn as nn_mod
+    from jax.experimental.shard_map import shard_map
     ccfg = nn_mod.arch_cim_config(cfg)
+    mesh = getattr(cfg, "cim_mesh", None)
+    m = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+    if m > 1 and cfg.n_experts % m == 0:
+        e_local = cfg.n_experts // m
+
+        def shard_fn(pcl_loc, xe_loc):
+            base = jax.lax.axis_index("model") * e_local
+            ys = []
+            for el in range(e_local):
+                pe = jax.tree_util.tree_map(lambda a: a[el], pcl_loc)
+                ys.append(nn_mod.packed_linear(pe, xe_loc[el], ccfg,
+                                               seed=seed + base + el))
+            return jnp.stack(ys)
+
+        fn = shard_map(shard_fn, mesh=mesh,
+                       in_specs=(P("model"), P("model")),
+                       out_specs=P("model"), check_rep=False)
+        return fn(pcl, xe).astype(xe.dtype)
     ys = []
     for e in range(cfg.n_experts):
         pe = jax.tree_util.tree_map(lambda a: a[e], pcl)

@@ -16,12 +16,13 @@ the bias is split evenly over B appended rows driven with full-scale inputs.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from ..core.types import CIMConfig, CoreSpec, NonIdealityConfig
 from ..core.quant import pact_quantize
@@ -195,7 +196,11 @@ class ShardedPackedLayer:
     row-parallel shards each consume a slice of the input and produce
     partial sums (add = the psum over 'model'). `shards` is a
     PackedCIMLayer pytree whose arrays carry a leading shard dim (further
-    leading dims appear when layer stacks are scanned)."""
+    leading dims appear when layer stacks are scanned). Two executors
+    serve it: `sharded_packed_forward` runs each shard device-resident
+    under shard_map on a real mesh (deploy-time placement maps the shard
+    dim onto 'model'); `sharded_packed_loop` unrolls the shards in one
+    process — the single-device fallback and the parity oracle."""
     shards: Any            # PackedCIMLayer, leading (n_shards,) on arrays
     partition: str         # 'col' | 'row' | 'none'
     n_shards: int
@@ -208,16 +213,20 @@ class ShardedPackedLayer:
         return cls(children[0], *aux)
 
 
-def sharded_packed_forward(spl: ShardedPackedLayer, x, ccfg: CIMConfig, *,
-                           seed: int = 0):
-    """Serve one projection through its per-TP-shard engines.
+def sharded_packed_loop(spl: ShardedPackedLayer, x, ccfg: CIMConfig, *,
+                        seed: int = 0):
+    """Unrolled-loop executor for a ShardedPackedLayer — the SINGLE-DEVICE
+    FALLBACK and the PARITY ORACLE for the shard_map path.
 
-    x: (B, R_global) float. Each shard is one packed Pallas dispatch over
-    that shard's own compiled plan; 'row' shards read their input slice and
-    their partial outputs are summed — the digital analogue of the psum
-    over the 'model' axis (on a real mesh this add lowers to an
-    all-reduce; here the shard loop is unrolled inside the serving jit, and
-    identical per-shard plan shapes share one kernel trace).
+    x: (B, R_global) float. Every shard's packed Pallas dispatch runs in
+    one process, unrolled inside the serving jit (identical per-shard plan
+    shapes share one kernel trace): 'row' shards read their input slice
+    and their partial outputs fold left-to-right in shard order — the
+    in-process analogue of the psum over 'model' — while 'col' shard
+    outputs concatenate in shard order. `sharded_packed_forward` is
+    bitwise-equal to this loop on a real mesh (tests/test_mesh_serving.py
+    holds the contract), so single-device serving and mesh serving cannot
+    drift.
     """
     outs = []
     for s in range(spl.n_shards):
@@ -230,8 +239,91 @@ def sharded_packed_forward(spl: ShardedPackedLayer, x, ccfg: CIMConfig, *,
     if spl.n_shards == 1:
         return outs[0]
     if spl.partition == "row":
-        return functools.reduce(jnp.add, outs)       # psum over 'model'
+        return _ordered_fold(jnp.stack(outs))        # psum over 'model'
     return jnp.concatenate(outs, axis=-1)            # all-gather over 'model'
+
+
+def _ordered_fold(parts):
+    """Left-fold partial sums in shard order, one f32 add at a time, with
+    the partials MATERIALIZED first — the one reduction both TP executors
+    share, so they agree bitwise.
+
+    The fold runs as a `lax.scan` deliberately: the while-loop boundary
+    forces every partial to be a real buffer before any add. A plain
+    unrolled `reduce(add, outs)` lets XLA CPU fuse each shard's final
+    de-normalizing multiply (packed_forward's `acc * w_max * scale / ...`)
+    into the neighboring add and contract the pair into an FMA — skipping
+    the intermediate rounding and drifting 1 ulp from the device-resident
+    mesh path, whose partials are materialized by the all-gather
+    collective. (`lax.optimization_barrier` does NOT stop that
+    contraction — it happens at LLVM level inside a fusion.) Identical
+    adds on identical materialized values in identical order is the whole
+    bitwise contract between `sharded_packed_loop` and
+    `sharded_packed_forward`; change both or neither."""
+    y, _ = jax.lax.scan(lambda c, p: (c + p, None), parts[0], parts[1:])
+    return y
+
+
+def sharded_packed_forward(spl: ShardedPackedLayer, x, ccfg: CIMConfig, *,
+                           seed: int = 0, mesh=None,
+                           row_reduce: str = "ordered"):
+    """Serve one projection through its per-TP-shard engines.
+
+    x: (B, R_global) float. With a real `mesh` (launch/mesh.serving_mesh)
+    whose 'model' axis matches `spl.n_shards`, each shard's packed Pallas
+    dispatch runs DEVICE-RESIDENT under `jax.shard_map`: the device
+    holding shard s (its chip stack was placed there at deploy time —
+    `deploy_transformer_cim(mesh=...)` via
+    `distributed/sharding.packed_shardings`) executes that shard's plan
+    locally, and the shards meet in exactly ONE collective per projection
+    — the psum over 'model' for row-parallel partial sums, the out-spec
+    all-gather for column-parallel output slices. This is the NeuRRAM
+    dataflow at mesh scale: one compiled chip per parallel core (TP
+    shard), partial sums reduced digitally between cores.
+
+    row_reduce picks how the row-parallel psum lowers:
+      * 'ordered' (default): all_gather + the shared `_ordered_fold`
+        (left-fold add in shard order over materialized partials) —
+        bitwise-equal to `sharded_packed_loop` by construction, because
+        `lax.psum`'s reduction order is backend-defined and drifts by
+        1 ulp on split plans (the folded denorm makes shard partials
+        non-integer floats, so addition order matters; the parity tests
+        pin this contract).
+      * 'psum': `lax.psum` — fewer bytes on real interconnects (a ring
+        all-reduce moves ~2x the output instead of n_shards x); use it
+        when 1-ulp nondeterminism vs the single-device oracle is
+        acceptable.
+
+    Without a mesh — or when the mesh's 'model' width does not match the
+    deploy (e.g. a chip stack deployed wider than the local device count)
+    — execution falls back to `sharded_packed_loop`, the documented
+    single-device executor and the parity oracle the shard_map path is
+    bitwise-tested against. Replicated projections (n_shards == 1) always
+    take the loop (one dispatch, replicated over the mesh by GSPMD).
+    """
+    if mesh is None or spl.n_shards == 1 \
+            or dict(mesh.shape).get("model", 1) != spl.n_shards:
+        return sharded_packed_loop(spl, x, ccfg, seed=seed)
+    part = spl.partition
+
+    def shard_fn(shards, xs):
+        pcl = jax.tree_util.tree_map(lambda a: jnp.squeeze(a, 0), shards)
+        y = cim_api.packed_forward(pcl, xs, ccfg, seed=seed)
+        if part == "row":                    # THE one collective
+            if row_reduce == "psum":
+                y = jax.lax.psum(y, "model")
+            else:
+                # all_gather materializes every shard's partial, then the
+                # SAME fold as the loop oracle runs on every device
+                y = _ordered_fold(jax.lax.all_gather(y, "model"))
+        return y
+
+    x_spec = P(None, "model") if part == "row" else P()
+    out_spec = P(None, "model") if part == "col" else P()
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(P("model"), x_spec), out_specs=out_spec,
+                   check_rep=False)
+    return fn(spl.shards, x)
 
 
 def deploy_packed_stack(key, stacked_w: Dict[str, jax.Array],
@@ -246,6 +338,9 @@ def deploy_packed_stack(key, stacked_w: Dict[str, jax.Array],
     in_alpha: PACT input clip — scalar, or per-name dict for stacks whose
     projections see differently-scaled activations (e.g. rwkv6's `cv`,
     driven by a squared-relu, rides a wider clip than the rms-normed mixes).
+    A dict's keys must all name projections in this stack: an unknown key
+    raises instead of silently deploying the projection it was meant to
+    retune at the 1.0 default (`core.cim._alpha_for`'s fallback).
     Each layer index gets its own `core.cim.compile_chip` run (one chip per
     transformer layer): all of that layer's matrices go through the full
     plan -> schedule -> program -> calibrate -> pack pipeline ONCE. The
@@ -255,6 +350,13 @@ def deploy_packed_stack(key, stacked_w: Dict[str, jax.Array],
     dispatch per step.
     """
     names = sorted(stacked_w)
+    if isinstance(in_alpha, dict):
+        unknown = sorted(set(in_alpha) - set(names))
+        if unknown:
+            raise ValueError(
+                f"in_alpha names {unknown} match no projection in this "
+                f"stack (stack names: {names}) — a typo here would "
+                "silently deploy the projection at the default clip")
     n_layers = stacked_w[names[0]].shape[0]
     spec = spec or CoreSpec()
 
@@ -270,13 +372,15 @@ def deploy_packed_stack(key, stacked_w: Dict[str, jax.Array],
         for n in names}
 
 
-def packed_linear(pcl, x, ccfg: CIMConfig, *, seed: int = 0):
+def packed_linear(pcl, x, ccfg: CIMConfig, *, seed: int = 0, mesh=None):
     """x: (B, n_in) float -> (B, n_out) float through one packed dispatch
     (or one per shard). pcl: a (scan-sliced) core.cim.PackedCIMLayer or
-    ShardedPackedLayer."""
+    ShardedPackedLayer. mesh: optional serving Mesh — multi-shard layers
+    then execute device-resident under shard_map (sharded_packed_forward);
+    None keeps the unrolled single-process loop."""
     if isinstance(pcl, ShardedPackedLayer):
         return sharded_packed_forward(pcl, x.astype(jnp.float32), ccfg,
-                                      seed=seed)
+                                      seed=seed, mesh=mesh)
     return cim_api.packed_forward(pcl, x.astype(jnp.float32), ccfg,
                                   seed=seed)
 
@@ -290,11 +394,38 @@ def arch_cim_config(arch_cfg) -> CIMConfig:
             ir_drop_alpha=getattr(arch_cfg, "cim_ir_drop", 0.0)))
 
 
+def _group_alpha(in_alpha, names):
+    """Restrict a per-name in_alpha dict to one deploy group's names (the
+    full dict is validated against the full stack up front; each
+    deploy_packed_stack call re-validates against its own group)."""
+    if not isinstance(in_alpha, dict):
+        return in_alpha
+    return {n: a for n, a in in_alpha.items() if n in names}
+
+
+def place_packed_stack(tree, mesh, n_shards: int, shard_axis: int = 0):
+    """Place a packed chip stack's arrays onto the serving mesh at DEPLOY
+    time: the shard axis lands on 'model' (each device holds its own
+    shard's compiled chips — distributed/sharding.packed_shardings), all
+    other dims replicate. ShardedPackedLayers re-wrap with their aux
+    preserved; raw trees (MoE expert stacks) place as-is. The shard_map
+    serving path then runs with zero per-call transfers."""
+    from ..distributed.sharding import packed_shardings
+    arrs = tree.shards if isinstance(tree, ShardedPackedLayer) else tree
+    placed = jax.tree_util.tree_map(
+        jax.device_put, arrs,
+        packed_shardings(mesh, arrs, n_shards, shard_axis))
+    if isinstance(tree, ShardedPackedLayer):
+        return ShardedPackedLayer(placed, tree.partition, tree.n_shards)
+    return placed
+
+
 def _deploy_sharded_stacks(key, stacked: Dict[str, jax.Array],
                            ccfg: CIMConfig, *, mode: str,
                            in_alpha: Union[float, Dict[str, float]],
                            mesh_shape: Dict[str, int],
-                           spec: Optional[CoreSpec]
+                           spec: Optional[CoreSpec],
+                           mesh=None
                            ) -> Dict[str, "ShardedPackedLayer"]:
     """Compile (L, R, C) weight stacks into per-TP-shard packed chip stacks.
 
@@ -304,6 +435,9 @@ def _deploy_sharded_stacks(key, stacked: Dict[str, jax.Array],
     (distributed/sharding.param_pspecs + shard_slice — a NeuRRAM 'core' is
     an intra-shard unit). Returns name -> ShardedPackedLayer whose arrays
     carry leading (L, n_shards) dims, ready for lax.scan over layers.
+    With `mesh`, each multi-shard stack is additionally PLACED on the mesh
+    (shard dim -> 'model', `place_packed_stack`) so the shard_map serving
+    path finds every shard's chips already device-resident.
 
     Projections whose sharded dim is not divisible by the axis size fall
     back to a single replicated engine (fit_pspecs rule). Replicated
@@ -314,6 +448,12 @@ def _deploy_sharded_stacks(key, stacked: Dict[str, jax.Array],
     """
     from ..distributed.sharding import (param_pspecs, partition_kind,
                                         shard_slice, shard_shape)
+    if isinstance(in_alpha, dict):
+        unknown = sorted(set(in_alpha) - set(stacked))
+        if unknown:
+            raise ValueError(
+                f"in_alpha names {unknown} match no projection in this "
+                f"deploy (projections: {sorted(stacked)})")
     n_sh = max(int(mesh_shape.get("model", 1)), 1)
     specs = param_pspecs({"layers": dict(stacked)})["layers"]
     kinds = {}
@@ -333,13 +473,14 @@ def _deploy_sharded_stacks(key, stacked: Dict[str, jax.Array],
                                     {"model": s}) for n in sharded_names}
             shard_layers.append(deploy_packed_stack(
                 jax.random.fold_in(key, s), local, ccfg, mode=mode,
-                in_alpha=in_alpha, spec=spec))
+                in_alpha=_group_alpha(in_alpha, sharded_names), spec=spec))
     none_layers = {}
     if none_names:
         none_layers = deploy_packed_stack(
             jax.random.fold_in(key, n_sh), {n: stacked[n]
                                             for n in none_names},
-            ccfg, mode=mode, in_alpha=in_alpha, spec=spec)
+            ccfg, mode=mode, in_alpha=_group_alpha(in_alpha, none_names),
+            spec=spec)
 
     out = {}
     for n in stacked:
@@ -348,17 +489,43 @@ def _deploy_sharded_stacks(key, stacked: Dict[str, jax.Array],
                                          none_layers[n])
             out[n] = ShardedPackedLayer(pcl, "none", 1)
         else:
-            pcl = jax.tree_util.tree_map(
+            spl = ShardedPackedLayer(jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs, axis=1),
-                *[sl[n] for sl in shard_layers])
-            out[n] = ShardedPackedLayer(pcl, kinds[n], n_sh)
+                *[sl[n] for sl in shard_layers]), kinds[n], n_sh)
+            if mesh is not None:
+                spl = place_packed_stack(spl, mesh, n_sh, shard_axis=1)
+            out[n] = spl
     return out
+
+
+def _resolve_mesh(arch_cfg, mesh, mesh_shape):
+    """Resolve the (mesh, mesh_shape) pair a CIM deploy plans and places
+    with: an explicit `mesh=` wins, else the arch's `cim_mesh` (the mesh
+    the serving jits close over); `mesh_shape` defaults to the mesh's own
+    axis sizes so the TP width and the placement cannot disagree — and an
+    explicit mesh_shape that DOES disagree with the mesh's 'model' width
+    raises here, before it becomes an opaque device_put divisibility
+    error inside place_packed_stack."""
+    mesh = mesh if mesh is not None else getattr(arch_cfg, "cim_mesh", None)
+    if mesh_shape is None:
+        mesh_shape = (dict(mesh.shape) if mesh is not None
+                      else {"model": 1})
+    elif mesh is not None \
+            and int(mesh_shape.get("model", 1)) != dict(mesh.shape)["model"]:
+        raise ValueError(
+            f"mesh_shape {dict(mesh_shape)} disagrees with the serving "
+            f"mesh's axes {dict(mesh.shape)}: per-shard chip stacks are "
+            "placed with their shard dim on 'model', so the TP width must "
+            "equal the mesh's 'model' size (drop mesh_shape to derive it "
+            "from the mesh)")
+    return mesh, dict(mesh_shape)
 
 
 def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
                            in_alpha: float = 3.0,
                            mesh_shape: Optional[Dict[str, int]] = None,
-                           spec: Optional[CoreSpec] = None):
+                           spec: Optional[CoreSpec] = None,
+                           mesh=None):
     """Compile every packed-servable projection of a transformer onto CIM
     chips and return params augmented with '<name>_cim' entries that
     models/transformer routes through when arch_cfg.cim_mode == "packed".
@@ -368,16 +535,23 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
     shard's local slice of every projection (distributed/sharding
     .param_pspecs + shard_slice — a NeuRRAM 'core' is an intra-shard
     unit). At serving time column-parallel shard outputs concatenate and
-    row-parallel partial outputs are summed over the 'model' axis inside
-    the jit'd forward (ShardedPackedLayer). Projections whose sharded dim
-    is not divisible by the axis size fall back to a single replicated
-    engine, mirroring distributed/sharding.fit_pspecs.
+    row-parallel partial outputs psum over the 'model' axis inside the
+    jit'd forward (ShardedPackedLayer -> sharded_packed_forward: under
+    shard_map on a real mesh, unrolled in-process otherwise). Projections
+    whose sharded dim is not divisible by the axis size fall back to a
+    single replicated engine, mirroring distributed/sharding.fit_pspecs.
+
+    mesh: optional real serving Mesh (launch/mesh.serving_mesh; defaults
+    to arch_cfg.cim_mesh). DEVICE PLACEMENT HAPPENS HERE, AT DEPLOY TIME:
+    every multi-shard chip stack is device_put with its shard dim on
+    'model' (place_packed_stack), and MoE expert stacks land expert-
+    parallel, so per-call serving never moves chip state.
 
     MoE expert stacks (ew_g/ew_i/ew_o, (L, E, d, de)): one chip per
     (layer, expert) — the paper's power-gated-core granularity — stacked
     back over E then L, and served through models/moe.moe_ffn's
     capacity-grouped dispatch (each routed group runs its own expert's
-    packed dispatch).
+    packed dispatch; expert-parallel under shard_map on a real mesh).
 
     spec: CoreSpec threaded through to every compile_chip call.
     """
@@ -388,14 +562,14 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
             "deploy through deploy_recurrent_cim")
     ccfg = arch_cim_config(arch_cfg)
     spec = spec or CoreSpec()
-    mesh_shape = dict(mesh_shape) if mesh_shape else {"model": 1}
+    mesh, mesh_shape = _resolve_mesh(arch_cfg, mesh, mesh_shape)
 
     stacked = {n: params["layers"][n] for n in PACKED_PROJ_KEYS
                if n in params["layers"]}
     new_layers = dict(params["layers"])
     for n, spl in _deploy_sharded_stacks(
             key, stacked, ccfg, mode=mode, in_alpha=in_alpha,
-            mesh_shape=mesh_shape, spec=spec).items():
+            mesh_shape=mesh_shape, spec=spec, mesh=mesh).items():
         new_layers[n + "_cim"] = spl
 
     # routed-expert stacks: one chip per (layer, expert) — each expert's
@@ -411,10 +585,17 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
             {n: expert_w[n][:, e] for n in names},
             ccfg, mode=mode, in_alpha=in_alpha, spec=spec)
             for e in range(n_experts)]
+        n_model = int(mesh_shape.get("model", 1))
         for n in names:
-            new_layers[n + "_cim"] = jax.tree_util.tree_map(
+            stack = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs, axis=1),
                 *[pe[n] for pe in per_exp])
+            if mesh is not None and n_model > 1 \
+                    and n_experts % n_model == 0:
+                # expert-parallel placement: the E dim is the shard axis
+                stack = place_packed_stack(stack, mesh, n_model,
+                                           shard_axis=1)
+            new_layers[n + "_cim"] = stack
 
     out = dict(params)
     out["layers"] = new_layers
@@ -449,7 +630,8 @@ def deploy_cim(key, params, arch_cfg, **kw):
 def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
                          in_alpha: float = 3.0,
                          mesh_shape: Optional[Dict[str, int]] = None,
-                         spec: Optional[CoreSpec] = None):
+                         spec: Optional[CoreSpec] = None,
+                         mesh=None):
     """Compile a recurrent stack's projections onto CIM chips — the paper's
     versatility claim closed for serving: the same TNSA chips that serve
     CNNs/transformers serve the RWKV-6 and Mamba-2 stacks.
@@ -468,9 +650,11 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
         through the ordinary dense_block `cim_linear` routing.
 
     Tensor parallelism mirrors deploy_transformer_cim: one engine per
-    'model'-axis shard via `_deploy_sharded_stacks`; prefill (chunked scan)
-    and O(1) decode both hit the packed Pallas kernel through the
-    `cim_linear` dispatch in models/rwkv6 and models/mamba2.
+    'model'-axis shard via `_deploy_sharded_stacks` (device-resident on a
+    real `mesh` — defaults to arch_cfg.cim_mesh — with shard_map
+    execution at serve time); prefill (chunked scan) and O(1) decode both
+    hit the packed Pallas kernel through the `cim_linear` dispatch in
+    models/rwkv6 and models/mamba2.
 
     in_alpha is the scalar PACT clip for rms-norm-scale inputs; rwkv6's
     `cv` (driven by the squared-relu of the `ck` output) gets `in_alpha**2`
@@ -484,7 +668,7 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
                          f"params['layers'] (expected some of {names})")
     ccfg = arch_cim_config(arch_cfg)
     spec = spec or CoreSpec()
-    mesh_shape = dict(mesh_shape) if mesh_shape else {"model": 1}
+    mesh, mesh_shape = _resolve_mesh(arch_cfg, mesh, mesh_shape)
 
     alphas: Dict[str, float] = {n: float(in_alpha) for n in stacked}
     if "cv" in alphas:          # squared-relu input range (see docstring)
@@ -493,7 +677,7 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
     new_layers = dict(params["layers"])
     for n, spl in _deploy_sharded_stacks(
             key, stacked, ccfg, mode=mode, in_alpha=alphas,
-            mesh_shape=mesh_shape, spec=spec).items():
+            mesh_shape=mesh_shape, spec=spec, mesh=mesh).items():
         new_layers[n + "_cim"] = spl
     out = dict(params)
     out["layers"] = new_layers
@@ -501,6 +685,7 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
     # zamba2 hybrid: the ONE shared attention+MLP block (single weight
     # copy, no layer stack) — compile as an L=1 stack, then strip the
     # layer dim so dense_block's scan-free call sees unstacked engines
+    # (placement happens AFTER the strip: the shard dim is then axis 0)
     if getattr(arch_cfg, "hybrid_attn_every", 0) > 0 \
             and "shared_attn" in params:
         sa = params["shared_attn"]
@@ -510,9 +695,13 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
             in_alpha=in_alpha, mesh_shape=mesh_shape, spec=spec)
         new_sa = dict(sa)
         for n, spl in sa_cim.items():
-            new_sa[n + "_cim"] = ShardedPackedLayer(
+            spl = ShardedPackedLayer(
                 jax.tree_util.tree_map(lambda a: a[0], spl.shards),
                 spl.partition, spl.n_shards)
+            if mesh is not None and spl.n_shards > 1:
+                spl = place_packed_stack(spl, mesh, spl.n_shards,
+                                         shard_axis=0)
+            new_sa[n + "_cim"] = spl
         out["shared_attn"] = new_sa
     return out
 

@@ -89,6 +89,13 @@ class ArchConfig:
     # IR-drop planning constraint for packed deploys: alpha > 0 makes the
     # chip compiler split wide matrices vertically (mapping.ir_drop_max_cols)
     cim_ir_drop: float = 0.0
+    # Real-mesh TP serving: the serving Mesh (launch/mesh.serving_mesh)
+    # every packed multi-shard projection executes on under shard_map —
+    # the prefill/decode jits close over cfg, so they close over the mesh.
+    # None keeps the unrolled single-process shard loop
+    # (nn.sharded_packed_loop, the parity oracle). jax.sharding.Mesh is
+    # hashable, so the config stays usable as a static jit argument.
+    cim_mesh: Any = None
 
     @property
     def head_dim(self) -> int:
@@ -115,15 +122,18 @@ def cim_linear(x, w, cfg: ArchConfig, *, seed: int = 0, packed=None):
              executor — `packed` is this projection's (scan-sliced)
              ShardedPackedLayer (or bare PackedCIMLayer) from
              nn.deploy_transformer_cim; each TP shard's scheduled tile plan
-             runs as ONE Pallas dispatch inside the serving jit, with
-             row-parallel partials psum'd over the 'model' axis.
+             runs as ONE Pallas dispatch inside the serving jit. With
+             cfg.cim_mesh set, multi-shard dispatches run device-resident
+             under shard_map with row-parallel partials psum'd over the
+             'model' axis (one collective per projection); without a mesh
+             the shard loop unrolls in-process (nn.sharded_packed_loop).
     """
     if cfg.cim_mode == "packed" and packed is not None:
         from . import nn as nn_mod
         ccfg = nn_mod.arch_cim_config(cfg)
         shape = x.shape
         y = nn_mod.packed_linear(packed, x.reshape(-1, shape[-1]), ccfg,
-                                 seed=seed)
+                                 seed=seed, mesh=cfg.cim_mesh)
         return y.reshape(*shape[:-1], y.shape[-1]).astype(x.dtype)
     if cfg.cim_mode in ("off", "packed"):
         # packed mode without a deployed plan (encoder, unembed, MoE expert

@@ -8,10 +8,15 @@
 # The fast tier is the pre-commit loop: kernels, planner/scheduler/packing,
 # engine, models, distributed — followed by a bench-smoke that runs
 # benchmarks/bench_mapping.py in quick mode and records the executor
-# timings to BENCH_mapping.json (the perf trajectory), a serve-smoke
-# that end-to-end serves the recurrent archs (rwkv6 + zamba2) through the
-# packed CIM path on tiny configs (the arch-dispatch + deploy_recurrent_cim
-# regression guard), and a recover-smoke that serves the bidirectional RBM
+# timings to BENCH_mapping.json (the perf trajectory, including the
+# shard_map-vs-unrolled TP rows its child process measures on 8 forced
+# host devices), a serve-smoke that end-to-end serves the recurrent archs
+# (rwkv6 + zamba2) through the packed CIM path on tiny configs (the
+# arch-dispatch + deploy_recurrent_cim regression guard), a MESH
+# serve-smoke that reruns serving on 8 forced host devices — prefill +
+# decode through the real-mesh shard_map TP path (--cim-mesh auto, one
+# engine per 'model'-axis device) for a dense, an MoE and a recurrent
+# arch — and a recover-smoke that serves the bidirectional RBM
 # image-recovery workload (packed fwd + transpose-direction dispatches of
 # one compiled chip; >=50% L2-error reduction enforced by the driver).
 # The bench gate is split by determinism: the
@@ -40,6 +45,19 @@ serve_smoke() {
     --batch 2 --prompt-len 8 --gen 3
 }
 
+mesh_serve_smoke() {
+  echo "== mesh-serve-smoke: shard_map TP serving on 8 forced devices =="
+  # one dense, one MoE, one recurrent arch through the real-mesh path:
+  # 8 'model'-axis shards, device-resident engines, shard_map dispatches
+  local flags="--xla_force_host_platform_device_count=8"
+  XLA_FLAGS="$flags" python -m repro.launch.serve --smoke --cim \
+    --arch gemma2-9b --batch 2 --prompt-len 8 --gen 3
+  XLA_FLAGS="$flags" python -m repro.launch.serve --smoke --cim \
+    --arch deepseek-moe-16b --batch 2 --prompt-len 8 --gen 3
+  XLA_FLAGS="$flags" python -m repro.launch.serve --smoke --cim \
+    --arch rwkv6-7b --batch 2 --prompt-len 8 --gen 3
+}
+
 recover_smoke() {
   echo "== recover-smoke: bidirectional RBM image recovery =="
   # packed fwd + transpose-direction bwd dispatches of ONE compiled chip;
@@ -53,6 +71,7 @@ case "$tier" in
     python -m pytest -q -m "not slow"
     bench_smoke
     serve_smoke
+    mesh_serve_smoke
     recover_smoke
     ;;
   full) exec python -m pytest -x -q ;;
