@@ -1,24 +1,31 @@
 """CIM MVM kernel timing (interpret mode on CPU; BlockSpec path identical to
-the TPU lowering) + oracle comparison — per-kernel harness."""
-import time
+the TPU lowering) + oracle comparison — per-kernel harness.
 
+Beyond the raw-kernel rows, this is the autotuner's measurement harness:
+it builds a genuinely merged (multi-pass) scheduled plan, drives
+repro.kernels.cim_mvm.autotune.tune over the bm candidate set with the
+SHARED benchmark timer (benchmarks/_timing.best_of — the same clock that
+reports every row, so "tuning helped" is falsifiable), and reports one
+autotune_*_bm* row per candidate (derived=1 marks the cached winner) plus
+the fused-vs-partial scheduled pair on the same plan. The one-trace-per-
+plan contract is ENFORCED here (raise, not warn) on the fused/partial
+rows: a fused kernel that silently retraced per slot would invalidate
+every number above it.
+"""
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import CIMConfig
+from repro.core.types import CIMConfig, CoreSpec
 from repro.core.conductance import weights_to_conductances
+from repro.core.mapping import (MatrixReq, plan_layers, pack_tiles,
+                                schedule_tiles, multicore_mvm_packed)
+from repro.kernels.cim_mvm import autotune
 from repro.kernels.cim_mvm.ops import cim_mvm
+from repro.kernels.cim_mvm.kernel import TRACE_COUNTS
 from repro.kernels.cim_mvm.ref import cim_mvm_ref
 from repro.kernels.noisy_matmul.ops import noisy_matmul
 
-
-def _time(fn, n=5):
-    fn()  # compile
-    t0 = time.time()
-    for _ in range(n):
-        r = fn()
-    jax.block_until_ready(r)
-    return (time.time() - t0) / n * 1e6
+from ._timing import best_of as _time
 
 
 def run():
@@ -38,8 +45,52 @@ def run():
         == cim_mvm_ref(x, c.g_pos, c.g_neg, vd, cfg).counts))
     xf = jax.random.normal(jax.random.PRNGKey(2), (128, 256))
     us_n = _time(lambda: noisy_matmul(xf, w, 0.1, block=(128, 128, 128)))
-    return [
+    rows = [
         ("kernel_cim_mvm_interpret", round(us_k, 1), int(match)),
         ("kernel_cim_mvm_oracle_bitserial", round(us_r, 1), 1),
         ("kernel_noisy_matmul_interpret", round(us_n, 1), 1),
     ]
+    rows.extend(_autotune_rows(cfg))
+    return rows
+
+
+def _autotune_rows(cfg):
+    """Autotuner sweep + fused/partial pair on a merged scheduled plan."""
+    r, co, n_cores = 300, 500, 3
+    k = jax.random.PRNGKey(4)
+    w = 0.1 * jax.random.normal(k, (r, co))
+    cond = weights_to_conductances(w, cfg.device)
+    tiles = plan_layers([MatrixReq("m", r, co)],
+                        CoreSpec(n_cores=n_cores)).tiles_for("m")
+    sched = pack_tiles(tiles, cond.g_pos - cond.g_neg,
+                       gsum=cond.g_pos + cond.g_neg, v_decr=0.002,
+                       schedule=schedule_tiles(tiles))
+    xb = jax.random.randint(jax.random.fold_in(k, 1), (256, r), -7, 8)
+
+    rows = []
+    t0 = TRACE_COUNTS["cim_mvm_scheduled"]
+    us_fused = _time(lambda: multicore_mvm_packed(xb, sched, cfg))
+    tr_fused = TRACE_COUNTS["cim_mvm_scheduled"] - t0
+    t0 = TRACE_COUNTS["cim_mvm_scheduled"]
+    us_part = _time(lambda: multicore_mvm_packed(xb, sched, cfg,
+                                                 fused=False))
+    tr_part = TRACE_COUNTS["cim_mvm_scheduled"] - t0
+    # ENFORCED one-trace contract: the fused kernel's whole pass-major grid
+    # (runs included) must compile as ONE pallas_call per plan
+    for name, tr in (("kernel_sched_fused", tr_fused),
+                     ("kernel_sched_partial", tr_part)):
+        if tr != 1:
+            raise SystemExit(f"one-trace-per-plan contract broken on "
+                             f"{name}: {tr} traces (expected 1)")
+    tag = f"p{sched.n_passes}_t{sched.n_tiles}"
+    rows.append((f"kernel_sched_fused_{tag}", round(us_fused, 1), tr_fused))
+    rows.append((f"kernel_sched_partial_{tag}", round(us_part, 1), tr_part))
+
+    winner, sweeps = autotune.tune(
+        xb.astype(jnp.float32), sched, activation=cfg.activation,
+        n_max=cfg.out_mag_levels, v_read=cfg.v_read,
+        timer=_time, refresh=True)
+    for bm, us_bm in sorted(sweeps.items()):
+        rows.append((f"autotune_{tag}_bm{bm}", round(us_bm, 1),
+                     int(bm == winner)))
+    return rows

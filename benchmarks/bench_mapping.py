@@ -14,14 +14,28 @@ per-matrix compat loop it replaced (gibbs_packed_* vs gibbs_compat_*) —
 and real-mesh TP rows (mesh_shardmap_* vs mesh_unrolled_*): one TP-sharded
 projection's forward through the device-resident shard_map executor vs the
 unrolled in-process shard loop, measured in a child process on 8 forced
-host devices (bench_mesh_child.py, bitwise parity asserted there). The
-derived column reports how many kernel jit traces the executor cost — every
-packed path's headline is ONE trace/dispatch per plan regardless of tile
-count. That trace-count contract is deterministic and always enforced; the
-"scheduled no slower than 2x packed on unmerged plans" wall-clock ratio is
-reported as a warning by default (shared CI machines make timing gates
-flaky) and only fails the run under --enforce-timing (the dedicated bench
-job).
+host devices (bench_mesh_child.py, bitwise parity asserted there).
+
+The merged (multi-pass) plan additionally carries the fused-reduction perf
+claim: sched_fused_* (the default in-kernel run accumulation) vs
+sched_partial_* (fused=False, the pre-fusion per-slot-partial baseline) on
+a serving-sized batch, both bitwise-checked against the per-tile loop
+oracle; the block-shape autotuner then sweeps bm candidates on the same
+plan with the SAME timer (autotune_*_bm* rows, derived=1 marks the winner)
+and sched_tuned_* re-times the serving path (bm=None) after the cache is
+primed. precision_serve_b{1..8} rows serve one compiled matrix at every
+bit-serial input precision (paper Fig. 1d from the serving path): the
+derived column is a dict of the analytic NeuRRAM energy/latency model at
+that operating point (core/energy.py) plus the measured relative error.
+
+The derived column otherwise reports how many kernel jit traces the
+executor cost — every packed path's headline is ONE trace/dispatch per plan
+regardless of tile count. That trace-count contract is deterministic and
+always enforced (sched_fused_/sched_partial_ rows included); the
+"scheduled no slower than 2x packed on unmerged plans" ratio and the
+"fused strictly faster than partial on merged plans" gate are reported as
+warnings by default (shared CI machines make timing gates flaky) and only
+fail the run under --enforce-timing (the dedicated bench job).
 
 CLI (the CI bench-smoke step):
 
@@ -33,7 +47,6 @@ import os
 import pathlib
 import subprocess
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -46,23 +59,12 @@ from repro.core.mapping import (MatrixReq, plan_layers, pack_tiles,
 from repro.kernels.cim_mvm.ops import cim_mvm
 from repro.kernels.cim_mvm.kernel import TRACE_COUNTS
 
+from ._timing import best_of as _time
+
 # (name, weight rows, cols) — 1 tile; 3x2=6 tiles; 4x3=12 tiles
 SHAPES = [("1tile", 100, 60), ("6tile", 300, 500), ("12tile", 500, 700)]
 # merged-plan case: forced onto a tiny chip -> multi-pass schedule
 MERGED = ("merged", 300, 500, 3)
-
-
-def _time(fn, n=5):
-    """Best-of-n wall clock in us: min is robust to GC pauses / noisy
-    neighbors — the ratio below is only advisory by default, but a clean
-    measurement keeps the warning signal meaningful."""
-    fn()  # compile
-    best = float("inf")
-    for _ in range(n):
-        t0 = time.time()
-        jax.block_until_ready(fn())
-        best = min(best, time.time() - t0)
-    return best * 1e6
 
 
 def run(quick: bool = False):
@@ -121,7 +123,11 @@ def run(quick: bool = False):
         out.append((f"mapping_sched_{name}_t{len(tiles)}",
                     round(us_sched, 1), tr_sched))
 
-    # merged multi-pass plan: scheduled kernel is the ONLY packed executor
+    # merged multi-pass plan: scheduled kernel is the ONLY packed executor.
+    # The fused run layout (in-kernel accumulation wherever the schedule's
+    # visit order allows) is the default; fused=False forces the pre-fusion
+    # per-slot-partial baseline — the sched_fused_ vs sched_partial_ pair is
+    # the perf claim of the fusion, gated below (strictly faster).
     mname, r, c, n_cores = MERGED
     k = jax.random.PRNGKey(2)
     w = jax.random.normal(k, (r, c)) * 0.1
@@ -129,14 +135,57 @@ def run(quick: bool = False):
     x = jax.random.randint(jax.random.fold_in(k, 1), (16, r), -7, 8)
     tiles = plan_layers([MatrixReq("m", r, c)],
                         CoreSpec(n_cores=n_cores)).tiles_for("m")
+    vd = 0.002
     sched = pack_tiles(tiles, cond.g_pos - cond.g_neg,
-                       gsum=cond.g_pos + cond.g_neg, v_decr=0.002,
+                       gsum=cond.g_pos + cond.g_neg, v_decr=vd,
                        schedule=schedule_tiles(tiles))
     t0 = TRACE_COUNTS["cim_mvm_scheduled"]
     us = _time(lambda: multicore_mvm_packed(x, sched, cfg), n_rep)
     tr = TRACE_COUNTS["cim_mvm_scheduled"] - t0
-    out.append((f"mapping_sched_{mname}_p{sched.n_passes}"
-                f"_t{sched.n_tiles}", round(us, 1), tr))
+    # fused-vs-partial pair on a serving-sized batch (more reduction work =
+    # more signal for the strictly-faster gate)
+    xb = jax.random.randint(jax.random.fold_in(k, 9), (256, r), -7, 8)
+    t0 = TRACE_COUNTS["cim_mvm_scheduled"]
+    us_fused = _time(lambda: multicore_mvm_packed(xb, sched, cfg), n_rep)
+    tr_fused = TRACE_COUNTS["cim_mvm_scheduled"] - t0
+    t0 = TRACE_COUNTS["cim_mvm_scheduled"]
+    us_part = _time(lambda: multicore_mvm_packed(xb, sched, cfg, fused=False),
+                    n_rep)
+    tr_part = TRACE_COUNTS["cim_mvm_scheduled"] - t0
+
+    def loop_merged(xx):
+        def matmul_fn(xt, _wt, t):
+            gp = jax.lax.dynamic_slice(cond.g_pos, (t.row0, t.col0),
+                                       (t.rows, t.cols))
+            gn = jax.lax.dynamic_slice(cond.g_neg, (t.row0, t.col0),
+                                       (t.rows, t.cols))
+            return cim_mvm(xt, gp, gn, vd, cfg)
+        return multicore_mvm(xx, cond.g_pos - cond.g_neg, tiles, matmul_fn)
+
+    y_loop = loop_merged(x)
+    assert bool(jnp.all(y_loop == multicore_mvm_packed(x, sched, cfg))), \
+        "fused scheduled != loop on merged plan"
+    assert bool(jnp.all(y_loop == multicore_mvm_packed(
+        x, sched, cfg, fused=False))), "partial scheduled != loop on merged"
+    tag = f"{mname}_p{sched.n_passes}_t{sched.n_tiles}"
+    out.append((f"mapping_sched_{tag}", round(us, 1), tr))
+    out.append((f"sched_fused_{tag}", round(us_fused, 1), tr_fused))
+    out.append((f"sched_partial_{tag}", round(us_part, 1), tr_part))
+
+    # block-shape autotune on the merged plan: sweep bm candidates with the
+    # SAME timer as every row here, cache the winner (ops.packed_call picks
+    # it up on every later bm=None call for this plan signature)
+    from repro.kernels.cim_mvm import autotune
+    winner, sweeps = autotune.tune(
+        xb.astype(jnp.float32), sched, activation=cfg.activation,
+        n_max=cfg.out_mag_levels, v_read=cfg.v_read,
+        timer=lambda f: _time(f, n_rep), refresh=True)
+    for bm, us_bm in sorted(sweeps.items()):
+        out.append((f"autotune_{tag}_bm{bm}", round(us_bm, 1),
+                    int(bm == winner)))
+    # the serving path (bm=None) now picks the tuned winner up via lookup
+    us_tuned = _time(lambda: multicore_mvm_packed(xb, sched, cfg), n_rep)
+    out.append((f"sched_tuned_{tag}", round(us_tuned, 1), winner))
 
     # recurrent projection stack (rwkv6 smoke geometry): one layer's whole
     # time-mix + channel-mix projection set compiled as ONE chip
@@ -236,8 +285,45 @@ def run(quick: bool = False):
     us_compat = _time(compat_loop, n_rep)
     out.append((f"gibbs_packed_rbm_c{cycles}", round(us_gibbs, 1), tr))
     out.append((f"gibbs_compat_rbm_c{cycles}", round(us_compat, 1), 0))
+    out.extend(_precision_rows(n_rep))
     out.extend(_mesh_rows())
     return out
+
+
+def _precision_rows(n_rep):
+    """Bit-serial precision scaling (paper Fig. 1d) FROM THE SERVING PATH:
+    one matrix compiled and served packed at every input precision 1..8.
+    Each row's derived column is a dict — the analytic NeuRRAM per-MVM
+    model at that operating point (core/energy.py: energy, latency,
+    TOPS/W, 1024-dim EDP) next to the measured serve time and the measured
+    relative error vs the float matmul. The 1-bit row costs the same model
+    energy as 2-bit (both are one input phase — binary inputs skip the
+    bit-serial loop entirely); accuracy is what the knob trades away."""
+    from repro.core.cim import compile_chip, packed_forward
+    from repro.core.energy import neurram_edp
+    rows = []
+    k = jax.random.PRNGKey(13)
+    w = 0.1 * jax.random.normal(k, (140, 200))
+    xf = jax.random.normal(jax.random.fold_in(k, 1), (64, 140))
+    y_ref = xf @ w
+    for bits in range(1, 9):
+        pcfg = CIMConfig(in_bits=bits, out_bits=8)
+        chip = compile_chip(jax.random.PRNGKey(14), {"m": w}, pcfg,
+                            CoreSpec(), "ideal", in_alpha=2.0)
+        fwd = jax.jit(lambda xx, _l=chip.layers["m"], _c=pcfg:
+                      packed_forward(_l, xx, _c))
+        us = _time(lambda: fwd(xf), n_rep)
+        y = fwd(xf)
+        rel = float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+        edp, cost = neurram_edp(bits, 8)
+        rows.append((f"precision_serve_b{bits}", round(us, 1), {
+            "energy_pj": round(float(cost.energy_pj), 2),
+            "latency_model_ns": round(float(cost.latency_ns), 2),
+            "tops_per_w": round(float(cost.tops_per_w), 3),
+            "edp_1024": float(edp),
+            "rel_err": round(rel, 4),
+        }))
+    return rows
 
 
 def _mesh_rows():
@@ -275,20 +361,24 @@ def main(argv=None):
     args = ap.parse_args(argv)
     rows = run(quick=args.quick)
     print("name,us_per_call,derived")
-    for row in rows:
-        print(",".join(str(v) for v in row))
+    for name, us, d in rows:
+        dcol = json.dumps(d, sort_keys=True) if isinstance(d, dict) else d
+        print(f"{name},{us},{dcol}")
     if args.out:
-        payload = {name: {"us_per_call": us, "traces": tr}
-                   for name, us, tr in rows}
+        payload = {name: ({"us_per_call": us, **d} if isinstance(d, dict)
+                          else {"us_per_call": us, "traces": d})
+                   for name, us, d in rows}
         with open(args.out, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {args.out}")
     # deterministic contract (always enforced): every packed/scheduled
     # executor costs exactly ONE kernel trace per plan shape — the
-    # shard_map executor included (its whole per-shard dispatch traces
-    # once inside the shard_map body)
+    # shard_map executor and the fused/partial scheduled pair included
+    # (each variant of the merged plan traces once; the pair costs two
+    # traces total because fused=False is a different jit signature)
     for name, _, tr in rows:
         if name.startswith(("mapping_packed_", "mapping_sched_",
+                            "sched_fused_", "sched_partial_",
                             "mesh_shardmap_")) and tr != 1:
             raise SystemExit(
                 f"packed-executor trace contract broken on {name}: "
@@ -301,6 +391,20 @@ def main(argv=None):
         if stag in by and by[stag] > 2.0 * by[tag]:
             msg = (f"scheduled dispatch regressed vs packed on {tag}: "
                    f"{by[stag]:.1f}us vs {by[tag]:.1f}us")
+            if args.enforce_timing:
+                raise SystemExit(msg)
+            print(f"WARNING: {msg}")
+    # fused-reduction perf gate: in-kernel run accumulation must beat the
+    # per-slot-partial baseline on merged plans — strictly, that is the
+    # point of the fusion (warning unless --enforce-timing)
+    us_by_name = {name: us for name, us, _ in rows}
+    for name, us in us_by_name.items():
+        if not name.startswith("sched_fused_"):
+            continue
+        pus = us_by_name.get(name.replace("sched_fused_", "sched_partial_"))
+        if pus is not None and not us < pus:
+            msg = (f"fused reduction not faster on {name}: "
+                   f"{us:.1f}us fused vs {pus:.1f}us partial")
             if args.enforce_timing:
                 raise SystemExit(msg)
             print(f"WARNING: {msg}")

@@ -26,9 +26,15 @@ and fifth stages live here:
     `v_decr_tiles (T,)`, `denorm_tiles (T, 1, bn)`) plus static
     `row_block/col_block` index tuples, and the whole layer executes as
     ONE Pallas dispatch (`kernels/cim_mvm`) with row-split partial sums
-    accumulated digitally — inside the kernel via output-block index maps
-    for single-pass plans, after the dispatch for pass-major scheduled
-    plans (whose revisits of a column block are not grid-consecutive).
+    accumulated digitally inside the kernel via output-block index maps.
+    Pack time computes the FUSED slot layout (`_fused_layout`): each
+    pass's slots are stably re-sorted by output column block so tiles
+    landing in the same block become CONSECUTIVE grid visits (runs) that
+    accumulate in-kernel; only a block genuinely revisited in a later
+    pass falls back to a per-run partial the wrapper folds after the
+    dispatch (`out_slot`/`out_col`). The stable within-pass sort keeps
+    every block's accumulation order identical to the pass-major order,
+    so fused and per-slot-partial execution stay bitwise-equal.
   * `pack_tiles_transposed` (stage 5, transpose direction): the BL->SL
     view of the same plan for bidirectional workloads (paper Fig. 4e-g
     RBM Gibbs sampling). It REUSES the forward pack's gd_tiles stack —
@@ -304,9 +310,21 @@ class PackedPlan:
                       idle slots pointing at block 0.
       seq_slot:       per-slot pass index (0 for unscheduled plans).
       n_passes:       pass count; > 1 routes execution to the pass-major
-                      scheduled kernel (kernels/cim_mvm), which writes one
-                      partial block per slot and reduces them per column
-                      block after the dispatch.
+                      scheduled kernel (kernels/cim_mvm), which accumulates
+                      each output RUN in-kernel (see out_slot/out_col).
+      tile_slot:      slot index -> position in the gd_tiles STACK. Identity
+                      for forward plans (tensors are built in grid order);
+                      a transpose-direction plan has its own fused grid
+                      order but indexes the SHARED forward stack, so its
+                      tile_slot is the cross-direction permutation
+                      (scalar-prefetched into the kernel's gd index map).
+      out_slot/out_col: the fused-reduction layout (`_fused_layout`):
+                      out_slot maps slot -> output RUN index, out_col maps
+                      run -> output column block (-1 for all-idle runs).
+                      A run is a maximal stretch of grid-consecutive slots
+                      sharing one output block; the kernel accumulates each
+                      run in VMEM and the wrapper folds only blocks split
+                      across runs (genuine non-consecutive revisits).
       transpose:      True for a TRANSPOSE-DIRECTION plan
                       (`pack_tiles_transposed`): gd_tiles are SHARED with the
                       forward plan (stored (T, bn, bk), i.e. transposed
@@ -325,6 +343,9 @@ class PackedPlan:
     seq_slot: Tuple[int, ...]
     n_passes: int
     transpose: bool
+    tile_slot: Tuple[int, ...]
+    out_slot: Tuple[int, ...]
+    out_col: Tuple[int, ...]
     gd_tiles: jax.Array
     inv_norm_tiles: jax.Array
     v_decr_tiles: jax.Array
@@ -351,7 +372,7 @@ class PackedPlan:
                     self.denorm_tiles)
         aux = (self.layer, self.bk, self.bn, self.n_rows, self.n_cols,
                self.row_block, self.col_block, self.seq_slot, self.n_passes,
-               self.transpose)
+               self.transpose, self.tile_slot, self.out_slot, self.out_col)
         return children, aux
 
     @classmethod
@@ -382,6 +403,46 @@ def _slot_order(tiles: Sequence[Tile], schedule: Optional[TileSchedule]
                          f"exactly once ({schedule.order=} vs "
                          f"{len(tiles)} tiles)")
     return list(schedule.order), schedule.n_passes, schedule.pass_len
+
+
+def _fused_layout(blocks: Sequence[Optional[int]], pass_len: int
+                  ) -> Tuple[List[int], Tuple[int, ...], Tuple[int, ...]]:
+    """Fused slot layout: re-sort each pass's slots by output block.
+
+    blocks: per-slot output block index in pass-major order (None = idle).
+    Returns (perm, out_slot, out_col):
+      perm:     grid position -> original slot position. Each pass is sorted
+                STABLY by output block (idle slots to the pass tail), never
+                across passes — same-block slots keep their relative order,
+                so every output block's accumulation order (and hence the
+                float result) is unchanged; only the grouping into grid
+                visits moves.
+      out_slot: grid position -> output RUN index. A run is a maximal
+                stretch of grid-CONSECUTIVE positions sharing one output
+                block (it may span a pass boundary): the kernel accumulates
+                a whole run in the output block's VMEM — exactly the
+                visits the Pallas TPU liveness rule keeps alive — and
+                emits ONE partial per run.
+      out_col:  run index -> output column block (-1 = all-idle run, whose
+                exact-zero partial the wrapper drops). A block revisited
+                NON-consecutively (a later pass, other blocks in between)
+                spans several runs and falls back to the post-dispatch fold
+                for those runs only.
+    """
+    perm: List[int] = []
+    for p0 in range(0, len(blocks), pass_len):
+        chunk = list(range(p0, min(p0 + pass_len, len(blocks))))
+        chunk.sort(key=lambda i: (1, 0) if blocks[i] is None
+                   else (0, blocks[i]))
+        perm += chunk
+    out_slot: List[int] = []
+    out_col: List[int] = []
+    for pos in perm:
+        blk = -1 if blocks[pos] is None else blocks[pos]
+        if not out_col or out_col[-1] != blk:
+            out_col.append(blk)
+        out_slot.append(len(out_col) - 1)
+    return perm, tuple(out_slot), tuple(out_col)
 
 
 def transpose_tiles(tiles: Sequence[Tile]) -> List[Tile]:
@@ -428,6 +489,9 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
                 f"tile offsets ({t.row0},{t.col0}) not aligned to "
                 f"({bk},{bn}) blocks — not a splitter-produced plan")
     order, n_passes, pass_len = _slot_order(tiles, schedule)
+    blocks = [None if i is None else tiles[i].col0 // bn for i in order]
+    perm, out_slot, out_col = _fused_layout(blocks, pass_len)
+    order = [order[p] for p in perm]
     v_decr = jnp.broadcast_to(jnp.asarray(v_decr, jnp.float32),
                               (len(tiles),))
     n_rows = max(t.row0 + t.rows for t in tiles)
@@ -475,6 +539,9 @@ def pack_tiles(tiles: Sequence[Tile], gd, *, gsum=None, v_decr=1.0,
         seq_slot=tuple(slot_pass),
         n_passes=n_passes,
         transpose=False,
+        tile_slot=tuple(range(len(order))),
+        out_slot=out_slot,
+        out_col=out_col,
         gd_tiles=jnp.stack(gd_tiles),
         inv_norm_tiles=jnp.stack(inv_tiles)[:, None, :],
         v_decr_tiles=jnp.stack(vd_slots),
@@ -518,9 +585,20 @@ def pack_tiles_transposed(tiles: Sequence[Tile], packed: PackedPlan, *,
             f"tiles/schedule do not match the forward pack "
             f"({len(order)} slots vs {packed.n_tiles}, "
             f"{n_passes} passes vs {packed.n_passes})")
+    bk_f, bn_f = packed.bk, packed.bn
+    # the forward pack built gd_tiles in ITS fused grid order; reproduce that
+    # permutation to locate each slot in the shared stack, then fuse THIS
+    # direction's grid by its own output blocks (forward ROW blocks). The
+    # kernel indexes gd_tiles through tile_slot — no copy, no permuted stack.
+    blocks_f = [None if i is None else tiles[i].col0 // bn_f for i in order]
+    perm_f, _, _ = _fused_layout(blocks_f, pass_len)
+    stack_pos = {p: g for g, p in enumerate(perm_f)}
+    blocks_b = [None if i is None else tiles[i].row0 // bk_f for i in order]
+    perm_b, out_slot, out_col = _fused_layout(blocks_b, pass_len)
+    tile_slot = tuple(stack_pos[p] for p in perm_b)
+    order = [order[p] for p in perm_b]
     v_decr = jnp.broadcast_to(jnp.asarray(v_decr, jnp.float32),
                               (len(tiles),))
-    bk_f, bn_f = packed.bk, packed.bn
     zero_out = jnp.zeros((bk_f,), jnp.float32)   # transpose output block
     inv_tiles, den_tiles, vd_slots = [], [], []
     for idx in order:
@@ -546,11 +624,14 @@ def pack_tiles_transposed(tiles: Sequence[Tile], packed: PackedPlan, *,
     return PackedPlan(
         layer=packed.layer, bk=bn_f, bn=bk_f,
         n_rows=packed.n_cols, n_cols=packed.n_rows,
-        row_block=packed.col_block,
-        col_block=packed.row_block,
+        row_block=tuple(packed.col_block[g] for g in tile_slot),
+        col_block=tuple(packed.row_block[g] for g in tile_slot),
         seq_slot=packed.seq_slot,
         n_passes=n_passes,
         transpose=True,
+        tile_slot=tile_slot,
+        out_slot=out_slot,
+        out_col=out_col,
         gd_tiles=packed.gd_tiles,          # SHARED — one conductance set
         inv_norm_tiles=jnp.stack(inv_tiles)[:, None, :],
         v_decr_tiles=jnp.stack(vd_slots),
@@ -558,7 +639,7 @@ def pack_tiles_transposed(tiles: Sequence[Tile], packed: PackedPlan, *,
 
 
 def multicore_mvm_packed(x, packed: PackedPlan, cfg=None, *, seed=0,
-                         interpret=None, scheduled=None):
+                         interpret=None, scheduled=None, fused: bool = True):
     """Execute a whole layer's tile plan in ONE compiled Pallas dispatch.
 
     cfg=None: exact tiled matmul (identity epilogue) — returns x @ W in f32,
@@ -569,16 +650,17 @@ def multicore_mvm_packed(x, packed: PackedPlan, cfg=None, *, seed=0,
     per plan shape. Multi-pass (seq-slot scheduled) plans take the
     pass-major grid kernel automatically; `scheduled` forces either kernel
     (benchmark use). Transpose-direction plans (`pack_tiles_transposed`,
-    packed.transpose=True) always take the transpose-direction kernel,
-    which writes one partial block per slot — `scheduled` is ignored.
+    packed.transpose=True) always take the transpose-direction kernel —
+    `scheduled` is ignored. `fused=False` forces the per-slot-partial
+    reduction layout (pre-fusion baseline; bitwise-equal on integer counts).
     """
     from ..kernels.cim_mvm.ops import cim_mvm_packed, packed_call
     if cfg is not None:
         return cim_mvm_packed(x, packed, cfg, seed=seed, interpret=interpret,
-                              scheduled=scheduled)
+                              scheduled=scheduled, fused=fused)
     return packed_call(x, packed, activation="identity", n_max=1,
                        v_read=1.0, seed=seed, interpret=interpret,
-                       scheduled=scheduled)
+                       scheduled=scheduled, fused=fused)
 
 
 def multicore_mvm(x, weight, plan_tiles: Sequence[Tile], matmul_fn):

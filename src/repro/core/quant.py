@@ -24,7 +24,9 @@ def pact_quantize(x, alpha, bits: int, signed: bool = False):
     """
     alpha = jnp.asarray(alpha, x.dtype)
     if signed:
-        n = (1 << (bits - 1)) - 1
+        # binary (1-bit) inputs keep one magnitude level {-1, 0, 1}, not
+        # zero — matches CIMConfig.in_max and the ternary pulse encoding
+        n = max((1 << (bits - 1)) - 1, 1)
         xc = jnp.clip(x, -alpha, alpha)
         return _round_ste(xc * n / alpha) * alpha / n
     n = (1 << bits) - 1
@@ -40,7 +42,7 @@ def quantize_to_int(x, alpha, bits: int, signed: bool = True):
     """
     alpha = jnp.asarray(alpha, jnp.float32)
     if signed:
-        n = (1 << (bits - 1)) - 1
+        n = max((1 << (bits - 1)) - 1, 1)   # 1-bit: ternary {-1, 0, 1}
         scale = alpha / n
         xi = jnp.clip(jnp.round(x / scale), -n, n).astype(jnp.int32)
     else:

@@ -44,13 +44,21 @@ class NonIdealityConfig:
 @dataclasses.dataclass(frozen=True)
 class CIMConfig:
     """One CIM MVM configuration = one NeuRRAM core operating point."""
-    in_bits: int = 4                 # 1..6 (signed: 1 sign + in_bits-1 magnitude)
+    in_bits: int = 4                 # 1..8 (signed: 1 sign + in_bits-1 magnitude)
     out_bits: int = 8                # 1..8 (signed: 1 sign + out_bits-1 magnitude)
     v_read: float = 0.5              # V (paper: 0.5V read voltage at 130nm)
     v_ref: float = 0.9               # V mid-rail
     activation: str = "none"         # none | relu | tanh | sigmoid | stochastic
     device: DeviceConfig = DeviceConfig()
     nonideal: NonIdealityConfig = NonIdealityConfig()
+
+    def __post_init__(self):
+        # the serving knob (--cim-bits) sweeps the paper's Fig. 1d range;
+        # out of it the bit-serial folding / ADC count model is meaningless
+        if not 1 <= self.in_bits <= 8:
+            raise ValueError(f"in_bits must be in 1..8, got {self.in_bits}")
+        if not 1 <= self.out_bits <= 8:
+            raise ValueError(f"out_bits must be in 1..8, got {self.out_bits}")
 
     @property
     def in_mag_bits(self) -> int:

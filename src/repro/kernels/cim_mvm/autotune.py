@@ -1,0 +1,110 @@
+"""Block-shape autotuner for the packed CIM kernels.
+
+The packed kernels' only free block dimension is bm (batch rows per grid
+step) — bk/bn are fixed by the plan's tile geometry (a NeuRRAM core is
+256x256; the planner never emits bigger tiles). The best bm depends on the
+plan shape (tile count, pass structure, fused run layout) and the batch:
+small batches waste VMEM footprint at bm=256, large ones amortize better.
+
+`tune` sweeps the bm candidates for one (plan, batch, activation) signature
+with a best-of-n wall-clock measurement and caches the winner in a
+process-global table; `ops.packed_call` consults the cache through `lookup`
+on every call where the caller left bm=None, so serving picks up tuned
+shapes with zero per-call overhead (a dict probe on static geometry — no
+measurement ever happens on the serving path). Benchmarks drive `tune`
+explicitly (benchmarks/bench_kernel.py is the measurement harness) and can
+inject their own timer so all reported numbers share one timing method.
+
+The signature deliberately buckets the batch to the next power of two:
+serving batches drift (prefill vs decode) and the winner is stable within
+a 2x band, so bucketing keeps the cache small and the hit rate high.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+_DEFAULT_BM = 256
+_CACHE: Dict[tuple, int] = {}
+
+
+def _bucket(m: int) -> int:
+    """Next power of two >= m (batch bucket for the cache key)."""
+    b = 1
+    while b < m:
+        b *= 2
+    return b
+
+
+def plan_signature(packed, m: int, activation: str) -> tuple:
+    """Hashable key describing everything the best bm can depend on: the
+    plan's static geometry (block sizes, index maps, pass/run structure,
+    direction) plus the power-of-two batch bucket and the epilogue."""
+    return (_bucket(max(int(m), 1)), packed.bk, packed.bn,
+            packed.row_block, packed.out_slot, packed.out_col,
+            packed.n_passes, packed.transpose, activation)
+
+
+def lookup(packed, m: int, activation: str) -> int:
+    """Cached winner for this signature, or the 256 default before tuning."""
+    return _CACHE.get(plan_signature(packed, m, activation), _DEFAULT_BM)
+
+
+def candidates(m: int) -> Tuple[int, ...]:
+    """bm candidates for a batch of m rows: powers of two up to 256, each
+    clamped to m (the kernels clamp identically, so larger values would
+    retrace the same program)."""
+    out = []
+    for bm in (16, 32, 64, 128, 256):
+        c = min(bm, max(int(m), 1))
+        if c not in out:
+            out.append(c)
+    return tuple(out)
+
+
+def _best_of(fn: Callable[[], None], n: int = 3) -> float:
+    """Best-of-n wall-clock seconds; one untimed warm-up call compiles."""
+    fn()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tune(x, packed, *, activation: str, n_max: int, v_read: float, seed=0,
+         interpret=None, timer: Optional[Callable] = None,
+         refresh: bool = False):
+    """Measure every bm candidate for this (plan, batch, activation), cache
+    and return the winner.
+
+    timer: fn(thunk) -> seconds; defaults to `_best_of`. Benchmarks inject
+    their shared timer so the sweep and the reported rows agree.
+    refresh: re-measure even on a cache hit (a hit otherwise returns the
+    cached winner with an empty timing dict).
+    Returns (winner_bm, {bm: seconds}).
+    """
+    import jax
+
+    from .ops import packed_call     # late: ops imports this module
+
+    key = plan_signature(packed, x.shape[0], activation)
+    if key in _CACHE and not refresh:
+        return _CACHE[key], {}
+    timer = timer or _best_of
+    timings: Dict[int, float] = {}
+    for bm in candidates(x.shape[0]):
+        def run(bm=bm):
+            jax.block_until_ready(packed_call(
+                x, packed, activation=activation, n_max=n_max,
+                v_read=v_read, seed=seed, bm=bm, interpret=interpret))
+        timings[bm] = timer(run)
+    winner = min(timings, key=timings.get)
+    _CACHE[key] = winner
+    return winner, timings
+
+
+def clear() -> None:
+    """Drop every cached winner (test isolation)."""
+    _CACHE.clear()

@@ -28,16 +28,19 @@ A third kernel executes SCHEDULED plans (core/mapping.schedule_tiles):
 
   * `cim_mvm_scheduled_pallas` — pass-major grid (i, p, s): pass p runs the
     tiles the chip fires simultaneously (one per core), successive passes
-    model the serialized access to merged cores (seq_slot > 0). Tile order
-    is no longer output-block-contiguous, and Pallas TPU only preserves an
-    output block's VMEM across CONSECUTIVE grid visits — a later pass
-    revisiting an earlier pass's column block would read stale memory if
-    the kernel accumulated in place. So each slot writes its OWN partial
-    block (every output block is visited exactly once) and the wrapper
-    reduces the per-slot partials into column blocks in slot order after
-    the dispatch — which is where the chip accumulates row-split partial
-    sums too: digitally, outside the analog array. Idle padding slots
-    carry zero denorm and contribute exact zeros.
+    model the serialized access to merged cores (seq_slot > 0). Pallas TPU
+    only preserves an output block's VMEM across CONSECUTIVE grid visits,
+    so pack time re-sorts each pass's slots by output block
+    (core/mapping._fused_layout) and hands the kernel a FUSED run layout
+    (`out_slot`: slot -> run, `out_col`: run -> column block): every run of
+    grid-consecutive same-block slots accumulates in-kernel exactly like
+    the tile-grid kernel (first visit zero-initializes, the rest add), and
+    one partial is emitted per RUN instead of per slot. Only a block
+    genuinely revisited non-consecutively (a later pass's row split) spans
+    several runs, and the wrapper folds just those after the dispatch —
+    which is where the chip accumulates row-split partial sums too:
+    digitally, outside the analog array. Idle padding slots carry zero
+    denorm; their all-idle runs (out_col -1) are dropped by the wrapper.
 
 A fourth kernel executes the TRANSPOSE direction (TNSA bidirectionality,
 paper Fig. 4e-g — the BL->SL read of the same programmed cells):
@@ -46,10 +49,13 @@ paper Fig. 4e-g — the BL->SL read of the same programmed cells):
     stack (no transposed copy of the conductances): each slot contracts its
     stored (bk, bn) block on the COLUMN axis (x @ gd.T via dot_general),
     normalizes by the transpose direction's per-row normalizer and applies
-    that direction's own calibrated ADC step. Forward slot order is not
-    output-contiguous in the transpose direction, so — like the scheduled
-    kernel — each slot writes a private partial block and the wrapper
-    reduces them per output block after the dispatch.
+    that direction's own calibrated ADC step. The transpose plan carries
+    its OWN fused grid order (sorted by transpose-direction output block)
+    while the conductance stack stays in forward order: a scalar-prefetched
+    `tile_slot` map steers each grid step to its stored block, and the same
+    run layout (`out_slot`/`out_col`) drives in-kernel accumulation with
+    the per-run fallback fold in the wrapper, exactly like the scheduled
+    kernel.
 
 The stochastic-activation (LFSR comparator-bit) path is supported in ALL
 packed kernels: counts are neuron-unit bits, so the kernels weight them by
@@ -287,47 +293,79 @@ def cim_mvm_packed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
 
 # --------------------------------------------------------- scheduled executor
 
-def _cim_sched_kernel(row_ref, x_ref, gd_ref, invn_ref,
+def _cim_sched_kernel(row_ref, outs_ref, x_ref, gd_ref, invn_ref,
                       den_ref, vd_ref, seed_ref, out_ref, *, pass_len: int,
                       v_read: float, activation: str, n_max: int):
     """One grid step = one (batch block, pass, core slot) triple.
 
-    Pass-major order models the chip's time-shared merged cores: the same
-    output COLUMN block can be revisited in a LATER pass (a seq-slot row
-    split), and Pallas TPU only keeps an output block live in VMEM across
-    consecutive grid visits — so no in-kernel accumulation. Each slot
-    writes its own (bm, bn) partial block (visited exactly once); the
-    wrapper reduces the partials into column blocks after the dispatch.
-    Idle padding slots have zero denorm: their partial is exactly zero.
+    Pass-major order models the chip's time-shared merged cores. Pack time
+    sorted each pass's slots by output block, so slots of one output RUN
+    (out_slot, prefetched) are grid-consecutive: the run's first visit
+    zero-initializes the block, every visit accumulates the tile's (masked,
+    optionally de-normalized) ADC counts — in-kernel digital row-split
+    accumulation under the Pallas TPU consecutive-revisit VMEM rule. A slot
+    opening a new run writes to a FRESH partial block, so a column block
+    revisited in a later pass never reads stale memory. Idle padding slots
+    have zero denorm: their all-idle runs accumulate exactly zero.
     """
     p, s = pl.program_id(1), pl.program_id(2)
     t = p * pass_len + s
+    first = jnp.logical_or(
+        t == 0, outs_ref[jnp.maximum(t - 1, 0)] != outs_ref[t])
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
     q = jnp.dot(x_ref[...], gd_ref[0],
                 preferred_element_type=jnp.float32) * v_read * invn_ref[0]
     counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
                        ij=(pl.program_id(0), t))
-    out_ref[...] = (counts * _acc_weight(invn_ref[0], den_ref[0],
-                                         activation)).astype(out_ref.dtype)
+    out_ref[...] += counts * _acc_weight(invn_ref[0], den_ref[0], activation)
+
+
+def _fold_runs(parts, out_col, bn, mp):
+    """Fold per-run partials into column blocks, in run order.
+
+    The common case — every column block is exactly one run, runs in block
+    order, no all-idle runs — IS the final output: return it without any
+    scatter. Otherwise add each run into its block (skipping idle runs,
+    out_col -1), the same left-fold order the per-slot reduction used, so
+    fused and unfused execution agree bitwise on integer-valued counts.
+    """
+    n_col_blocks = max(c for c in out_col if c >= 0) + 1
+    if out_col == tuple(range(n_col_blocks)):
+        return parts
+    y = jnp.zeros((mp, n_col_blocks * bn), jnp.float32)
+    for r, c in enumerate(out_col):
+        if c >= 0:
+            y = y.at[:, c * bn:(c + 1) * bn].add(
+                parts[:, r * bn:(r + 1) * bn])
+    return y
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("row_block", "col_block", "n_passes",
+    static_argnames=("row_block", "out_slot", "out_col", "n_passes",
                      "activation", "n_max", "v_read", "bm", "interpret"))
 def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
                              v_decr_tiles, seed, *,
-                             row_block, col_block, n_passes: int,
+                             row_block, out_slot, out_col, n_passes: int,
                              activation: str = "none", n_max: int = 127,
                              v_read: float = 0.5, bm: int = 256,
                              interpret: bool = False):
     """Whole-layer scheduled CIM MVM: ONE pallas_call over a pass-major grid.
 
     x:(M,K) f32 integer-valued activations; gd_tiles:(P*S,bk,bn) pass-major
-    slot tensors (idle slots zeroed); inv_norm_tiles/denorm_tiles:(P*S,1,bn);
-    v_decr_tiles:(P*S,); row_block/col_block: static per-slot tuples
-    (row_block scalar-prefetched; col_block steers the post-dispatch
-    reduction of per-slot partials). Returns (M_padded, n_col_blocks*bn)
-    f32 — caller slices to (M, C).
+    slot tensors in FUSED order (each pass sorted by output block, idle
+    slots zeroed at the pass tail); inv_norm_tiles/denorm_tiles:(P*S,1,bn);
+    v_decr_tiles:(P*S,); row_block: static per-slot input block tuple;
+    out_slot/out_col: the fused run layout (slot -> run, run -> column
+    block; core/mapping._fused_layout). row_block and out_slot are
+    scalar-prefetched into the kernel's index maps; the kernel accumulates
+    each run in-kernel and `_fold_runs` folds only blocks split across
+    runs. Returns (M_padded, n_col_blocks*bn) f32 — caller slices to
+    (M, C).
     """
     TRACE_COUNTS["cim_mvm_scheduled"] += 1
     m, kdim = x.shape
@@ -335,7 +373,7 @@ def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
     pass_len = n_slots // n_passes
     bm = min(bm, m)
     n_row_blocks = max(row_block) + 1
-    n_col_blocks = max(col_block) + 1
+    n_runs = len(out_col)
 
     def pad(a, mults):
         pads = [(0, -s % t) for s, t in zip(a.shape, mults)]
@@ -347,80 +385,88 @@ def cim_mvm_scheduled_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
     mp = xp.shape[0]
 
     row_idx = jnp.asarray(row_block, jnp.int32)
+    out_idx = jnp.asarray(out_slot, jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(mp // bm, n_passes, pass_len),
         in_specs=[
             pl.BlockSpec((bm, bk),
-                         lambda i, p, s, row: (i, row[p * pass_len + s])),
+                         lambda i, p, s, row, outs:
+                         (i, row[p * pass_len + s])),
             pl.BlockSpec((1, bk, bn),
-                         lambda i, p, s, row: (p * pass_len + s, 0, 0)),
+                         lambda i, p, s, row, outs:
+                         (p * pass_len + s, 0, 0)),
             pl.BlockSpec((1, 1, bn),
-                         lambda i, p, s, row: (p * pass_len + s, 0, 0)),
+                         lambda i, p, s, row, outs:
+                         (p * pass_len + s, 0, 0)),
             pl.BlockSpec((1, 1, bn),
-                         lambda i, p, s, row: (p * pass_len + s, 0, 0)),
+                         lambda i, p, s, row, outs:
+                         (p * pass_len + s, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        # one private partial block per slot: every output block is visited
-        # exactly once, so the Pallas TPU consecutive-revisit invariant
-        # holds trivially (no cross-pass in-kernel accumulation).
+        # one partial block per RUN: a run's slots are grid-consecutive, so
+        # its VMEM stays live across exactly the visits that accumulate
+        # into it (the Pallas TPU consecutive-revisit invariant).
         out_specs=pl.BlockSpec((bm, bn),
-                               lambda i, p, s, row: (i, p * pass_len + s)),
+                               lambda i, p, s, row, outs:
+                               (i, outs[p * pass_len + s])),
     )
     parts = pl.pallas_call(
         functools.partial(_cim_sched_kernel, pass_len=pass_len,
                           v_read=v_read, activation=activation, n_max=n_max),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((mp, n_slots * bn), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n_runs * bn), jnp.float32),
         interpret=interpret,
-    )(row_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
+    )(row_idx, out_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
       v_decr_tiles.astype(jnp.float32),
       jnp.asarray(seed, jnp.int32).reshape(1))
-    # digital row-split partial-sum accumulation (the chip does this outside
-    # the analog array too), in slot order so the float add order matches
-    # the loop executor bitwise; idle slots contribute exact zeros.
-    y = jnp.zeros((mp, n_col_blocks * bn), jnp.float32)
-    for t, c in enumerate(col_block):
-        y = y.at[:, c * bn:(c + 1) * bn].add(parts[:, t * bn:(t + 1) * bn])
-    return y
+    return _fold_runs(parts, out_col, bn, mp)
 
 
 # -------------------------------------------------- transpose-direction executor
 
-def _cim_transposed_kernel(in_ref, x_ref, gd_ref, invn_ref, den_ref, vd_ref,
-                           seed_ref, out_ref, *, v_read: float,
-                           activation: str, n_max: int):
+def _cim_transposed_kernel(in_ref, stk_ref, outs_ref, x_ref, gd_ref, invn_ref,
+                           den_ref, vd_ref, seed_ref, out_ref, *,
+                           v_read: float, activation: str, n_max: int):
     """One grid step = one (batch block, tile slot) pair, transpose direction.
 
     The tile block is the SAME stored (bk, bn) forward block — the shared
-    conductance stack — contracted on its COLUMN axis (dot_general over dim 1
-    of both operands == x @ gd.T without materializing a transposed copy):
-    the BL->SL read of the programmed cells. Slot order is the forward
-    pack's, which is NOT output-contiguous in the transpose direction, so
-    each slot writes its own partial block (every output block visited
-    exactly once — the Pallas TPU consecutive-revisit invariant holds
-    trivially) and the wrapper reduces partials per output block after the
-    dispatch, exactly like the scheduled kernel.
+    conductance stack, reached through the prefetched `tile_slot` map since
+    this direction's fused grid order differs from the stack's — contracted
+    on its COLUMN axis (dot_general over dim 1 of both operands == x @ gd.T
+    without materializing a transposed copy): the BL->SL read of the
+    programmed cells. Runs of grid-consecutive same-output-block slots
+    accumulate in-kernel (first visit zero-initializes); the wrapper folds
+    only blocks split across runs. Stochastic draws key on the tile's
+    STACK position, not the grid slot, so both directions and both fused /
+    per-slot layouts sample the same per-tile stream.
     """
     t = pl.program_id(1)
+    first = jnp.logical_or(
+        t == 0, outs_ref[jnp.maximum(t - 1, 0)] != outs_ref[t])
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
     q = jax.lax.dot_general(
         x_ref[...], gd_ref[0], dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32) * v_read * invn_ref[0]
     counts = _epilogue(q, vd_ref[t], activation, n_max, seed_ref,
-                       ij=(pl.program_id(0), t))
-    out_ref[...] = (counts * _acc_weight(invn_ref[0], den_ref[0],
-                                         activation)).astype(out_ref.dtype)
+                       ij=(pl.program_id(0), stk_ref[t]))
+    out_ref[...] += counts * _acc_weight(invn_ref[0], den_ref[0], activation)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("in_block", "out_block", "activation", "n_max",
-                     "v_read", "bm", "interpret"))
+    static_argnames=("in_block", "tile_slot", "out_slot", "out_col",
+                     "activation", "n_max", "v_read", "bm", "interpret"))
 def cim_mvm_transposed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
                               v_decr_tiles, seed, *,
-                              in_block, out_block, activation: str = "none",
+                              in_block, tile_slot, out_slot, out_col,
+                              activation: str = "none",
                               n_max: int = 127, v_read: float = 0.5,
                               bm: int = 256, interpret: bool = False):
     """Whole-layer transpose-direction CIM MVM: ONE pallas_call over the
@@ -429,20 +475,22 @@ def cim_mvm_transposed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
     x:(M, K') f32 integer-valued activations (K' = the layer's weight
     COLUMNS — the transpose direction's input space); gd_tiles:(T,bk,bn)
     the forward stack, unchanged and uncopied; inv_norm_tiles /
-    denorm_tiles:(T,1,bk) transpose-direction per-ROW tensors
-    (`pack_tiles_transposed`); v_decr_tiles:(T,) that direction's ADC
-    steps. in_block/out_block: static per-slot input (forward col) / output
-    (forward row) block indices. Returns (M_padded, n_out_blocks*bk) f32 —
-    caller slices to (M, R). Pass serialization needs no special grid here:
-    every slot writes a private partial, reduced per output block after the
-    dispatch (digital row-split accumulation, where the chip does it too).
+    denorm_tiles:(T,1,bk) transpose-direction per-ROW tensors in THIS
+    direction's fused grid order (`pack_tiles_transposed`);
+    v_decr_tiles:(T,) that direction's ADC steps. in_block: static per-slot
+    input (forward col) block indices; tile_slot: grid slot -> forward
+    stack position (the cross-direction permutation); out_slot/out_col:
+    the fused run layout (core/mapping._fused_layout) over transpose-
+    direction output (forward row) blocks. Runs accumulate in-kernel;
+    `_fold_runs` folds only blocks split across runs. Returns
+    (M_padded, n_out_blocks*bk) f32 — caller slices to (M, R).
     """
     TRACE_COUNTS["cim_mvm_transposed"] += 1
     m, kdim = x.shape
     n_slots, bko, bni = gd_tiles.shape     # stored fwd layout: out/in swap
     bm = min(bm, m)
     n_in_blocks = max(in_block) + 1
-    n_out_blocks = max(out_block) + 1
+    n_runs = len(out_col)
 
     def pad(a, mults):
         pads = [(0, -s % t) for s, t in zip(a.shape, mults)]
@@ -454,30 +502,34 @@ def cim_mvm_transposed_pallas(x, gd_tiles, inv_norm_tiles, denorm_tiles,
     mp = xp.shape[0]
 
     in_idx = jnp.asarray(in_block, jnp.int32)
+    stk_idx = jnp.asarray(tile_slot, jnp.int32)
+    out_idx = jnp.asarray(out_slot, jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=3,
         grid=(mp // bm, n_slots),
         in_specs=[
-            pl.BlockSpec((bm, bni), lambda i, t, inb: (i, inb[t])),
-            pl.BlockSpec((1, bko, bni), lambda i, t, inb: (t, 0, 0)),
-            pl.BlockSpec((1, 1, bko), lambda i, t, inb: (t, 0, 0)),
-            pl.BlockSpec((1, 1, bko), lambda i, t, inb: (t, 0, 0)),
+            pl.BlockSpec((bm, bni),
+                         lambda i, t, inb, stk, outs: (i, inb[t])),
+            pl.BlockSpec((1, bko, bni),
+                         lambda i, t, inb, stk, outs: (stk[t], 0, 0)),
+            pl.BlockSpec((1, 1, bko),
+                         lambda i, t, inb, stk, outs: (t, 0, 0)),
+            pl.BlockSpec((1, 1, bko),
+                         lambda i, t, inb, stk, outs: (t, 0, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((bm, bko), lambda i, t, inb: (i, t)),
+        out_specs=pl.BlockSpec((bm, bko),
+                               lambda i, t, inb, stk, outs: (i, outs[t])),
     )
     parts = pl.pallas_call(
         functools.partial(_cim_transposed_kernel, v_read=v_read,
                           activation=activation, n_max=n_max),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((mp, n_slots * bko), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n_runs * bko), jnp.float32),
         interpret=interpret,
-    )(in_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
+    )(in_idx, stk_idx, out_idx, xp, gd_tiles, inv_norm_tiles, denorm_tiles,
       v_decr_tiles.astype(jnp.float32),
       jnp.asarray(seed, jnp.int32).reshape(1))
-    y = jnp.zeros((mp, n_out_blocks * bko), jnp.float32)
-    for t, c in enumerate(out_block):
-        y = y.at[:, c * bko:(c + 1) * bko].add(parts[:, t * bko:(t + 1) * bko])
-    return y
+    return _fold_runs(parts, out_col, bko, mp)

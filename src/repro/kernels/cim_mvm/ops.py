@@ -16,6 +16,17 @@ Transpose-direction plans (core/mapping.pack_tiles_transposed — the BL->SL
 read of the same programmed tile stack) route to the transpose-direction
 kernel regardless of pass structure.
 
+The scheduled and transpose-direction kernels consume the plan's FUSED run
+layout (out_slot/out_col, computed at pack time): output runs accumulate
+in-kernel and only blocks genuinely revisited across passes fall back to a
+small post-dispatch fold. `fused=False` forces the per-slot-partial layout
+(one partial block per slot, whole reduction after the dispatch) — the
+pre-fusion baseline, kept for benchmarking the win and for parity tests.
+
+The batch block shape defaults to the autotuner's cached winner for the
+plan's signature (`autotune.lookup`; 256 until `autotune.tune` has measured
+the shape) — pass bm explicitly to pin it.
+
 On this CPU container the kernels run in interpret mode; on TPU set
 interpret=False (default chosen from backend).
 """
@@ -24,6 +35,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import autotune
 from .kernel import (cim_mvm_pallas, cim_mvm_packed_pallas,
                      cim_mvm_scheduled_pallas, cim_mvm_transposed_pallas)
 from ...core.types import CIMConfig
@@ -55,7 +67,8 @@ def cim_mvm(x_int, g_pos, g_neg, v_decr, cfg: CIMConfig, *, seed=0,
 
 
 def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
-                seed=0, bm=256, interpret=None, scheduled=None):
+                seed=0, bm=None, interpret=None, scheduled=None,
+                fused: bool = True):
     """Single entry point to the packed kernels: validates the plan/input
     fit, runs ONE pallas_call over every tile, slices the padding off.
     All packed executors (CIM and raw-matmul) funnel through here so the
@@ -65,6 +78,14 @@ def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
     n_passes > 1); True/False forces a kernel (benchmark use — a scheduled
     plan can always run the scheduled kernel, but multi-pass plans cannot
     run the tile-grid one).
+    fused: False degrades the scheduled / transpose-direction kernels to
+    the per-slot-partial layout (out_slot identity, one partial block per
+    slot, full post-dispatch reduction) — the pre-fusion baseline for
+    benchmarks and bitwise-parity tests. The grid order is unchanged, only
+    the reduction grouping moves, so both settings agree bitwise on
+    integer-valued counts.
+    bm: batch block rows; None takes the autotuner's cached winner for this
+    plan signature (`autotune.lookup`, default 256 before any `tune`).
     """
     if x.shape[-1] != packed.n_rows:
         raise ValueError(
@@ -72,14 +93,20 @@ def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
             f"'{packed.layer}' covers {packed.n_rows} weight rows")
     if interpret is None:
         interpret = _default_interpret()
+    if bm is None:
+        bm = autotune.lookup(packed, x.shape[0], activation)
+    n_slots = packed.n_tiles
+    out_slot = packed.out_slot if fused else tuple(range(n_slots))
+    out_col = packed.out_col if fused else packed.col_block
     if packed.transpose:
         # transpose-direction plan: one kernel serves any pass structure
-        # (each slot writes a private partial — `scheduled` is moot)
+        # (runs never straddle a pass's block re-sort — `scheduled` is moot)
         out = cim_mvm_transposed_pallas(
             x.astype(jnp.float32), packed.gd_tiles, packed.inv_norm_tiles,
             packed.denorm_tiles, packed.v_decr_tiles,
             jnp.asarray(seed, jnp.int32),
-            in_block=packed.row_block, out_block=packed.col_block,
+            in_block=packed.row_block, tile_slot=packed.tile_slot,
+            out_slot=out_slot, out_col=out_col,
             activation=activation, n_max=n_max, v_read=v_read, bm=bm,
             interpret=interpret)
         return out[:x.shape[0], :packed.n_cols]
@@ -94,8 +121,8 @@ def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
             x.astype(jnp.float32), packed.gd_tiles, packed.inv_norm_tiles,
             packed.denorm_tiles, packed.v_decr_tiles,
             jnp.asarray(seed, jnp.int32),
-            row_block=packed.row_block, col_block=packed.col_block,
-            n_passes=packed.n_passes,
+            row_block=packed.row_block, out_slot=out_slot,
+            out_col=out_col, n_passes=packed.n_passes,
             activation=activation, n_max=n_max, v_read=v_read, bm=bm,
             interpret=interpret)
     else:
@@ -109,8 +136,8 @@ def packed_call(x, packed, *, activation: str, n_max: int, v_read: float,
     return out[:x.shape[0], :packed.n_cols]
 
 
-def cim_mvm_packed(x_int, packed, cfg: CIMConfig, *, seed=0, bm=256,
-                   interpret=None, scheduled=None):
+def cim_mvm_packed(x_int, packed, cfg: CIMConfig, *, seed=0, bm=None,
+                   interpret=None, scheduled=None, fused: bool = True):
     """Packed whole-layer CIM MVM: one pallas_call for every tile of the
     plan, returning the digitally-accumulated (B, C) float32 output — summed
     ADC counts when the plan was packed with fold_norm=False (loop-executor
@@ -118,9 +145,10 @@ def cim_mvm_packed(x_int, packed, cfg: CIMConfig, *, seed=0, bm=256,
     over row splits) when packed with fold_norm=True (CIMEngine serving).
 
     x_int: (B, R) integer-valued activations covering the layer's full
-    weight-row space; packed: core.mapping.PackedPlan.
+    weight-row space; packed: core.mapping.PackedPlan. bm=None takes the
+    autotuned block shape; fused=False forces the per-slot-partial baseline.
     """
     return packed_call(x_int, packed, activation=cfg.activation,
                        n_max=cfg.out_mag_levels, v_read=cfg.v_read,
                        seed=seed, bm=bm, interpret=interpret,
-                       scheduled=scheduled)
+                       scheduled=scheduled, fused=fused)

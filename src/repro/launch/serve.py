@@ -37,7 +37,11 @@ collapse to the same single-dispatch path. Multi-device CPU smoke:
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (tools/ci.sh).
 --cim-ir-drop > 0 turns on the IR-drop planning constraint (vertical
 column splits); --cim-cores shrinks the per-chip core budget to force
-merged-core (seq-slot scheduled) plans.
+merged-core (seq-slot scheduled) plans; --cim-bits N (1..8) recompiles
+and serves the whole chip at N-bit bit-serial input precision — the
+paper's Fig. 1d precision-reconfigurability as a serving knob (the arch
+config is the one source of truth: deploy and the serving jits derive the
+same CIMConfig from it via models/nn.arch_cim_config).
 """
 from __future__ import annotations
 
@@ -66,6 +70,11 @@ def main(argv=None):
     ap.add_argument("--cim-mode", default="ideal",
                     choices=["ideal", "relaxed", "writeverify"],
                     help="conductance programming fidelity for --cim")
+    ap.add_argument("--cim-bits", type=int, default=0,
+                    help="bit-serial input precision for --cim (1..8, "
+                         "paper Fig. 1d; 0 = keep the arch default). The "
+                         "whole chip recompiles and serves at this "
+                         "precision — latency/energy scale with it")
     ap.add_argument("--cim-ir-drop", type=float, default=0.0,
                     help="ir_drop_alpha for --cim: > 0 plans IR-drop-bounded "
                          "vertical column splits")
@@ -86,6 +95,14 @@ def main(argv=None):
     if args.cim:
         cfg = cfg.replace(cim_mode="packed", dtype=jnp.float32,
                           cim_ir_drop=args.cim_ir_drop)
+        if args.cim_bits:
+            if not 1 <= args.cim_bits <= 8:
+                ap.error(f"--cim-bits must be in 1..8, got {args.cim_bits}")
+            # ONE source of truth: the arch config. deploy_cim and the
+            # serving jits both derive their CIMConfig from it
+            # (models/nn.arch_cim_config), so the chip is compiled AND
+            # served at this precision.
+            cfg = cfg.replace(cim_in_bits=args.cim_bits)
         if args.cim_mesh == "auto":
             from .mesh import serving_mesh
             mesh = serving_mesh()
@@ -126,6 +143,7 @@ def main(argv=None):
                      else "unrolled")
         print(f"cim: compiled {n_packed} projection stacks "
               f"x {cfg.n_layers} layers{shared} ({args.cim_mode}, "
+              f"bits={cfg.cim_in_bits}/{cfg.cim_out_bits}, "
               f"tp={tp}, exec={exec_mode}) "
               f"in {time.time() - t0:.1f}s")
     max_len = args.prompt_len + args.gen + (cfg.vis_patches or 0)

@@ -385,13 +385,33 @@ def packed_linear(pcl, x, ccfg: CIMConfig, *, seed: int = 0, mesh=None):
                                   seed=seed)
 
 
-def arch_cim_config(arch_cfg) -> CIMConfig:
-    """The CIMConfig a transformer arch serves its packed projections with
-    (shared by deploy and the in-jit forward so they cannot drift)."""
+def arch_cim_config(arch_cfg, ccfg: Optional[CIMConfig] = None) -> CIMConfig:
+    """The CIMConfig a transformer arch serves its packed projections with.
+
+    ArchConfig.cim_in_bits/cim_out_bits/cim_ir_drop are the ONE source of
+    truth for the chip operating point — deploy and the in-jit forward both
+    derive their CIMConfig here so they cannot drift. A caller holding its
+    own CIMConfig (chip-in-the-loop experiments) may pass it as `ccfg`; it
+    is returned as-is ONLY if its precision/IR-drop fields agree with the
+    arch — a mismatch raises instead of silently serving at a precision the
+    forward pass does not expect.
+    """
+    ir_drop = getattr(arch_cfg, "cim_ir_drop", 0.0)
+    if ccfg is not None:
+        if (ccfg.in_bits != arch_cfg.cim_in_bits
+                or ccfg.out_bits != arch_cfg.cim_out_bits
+                or ccfg.nonideal.ir_drop_alpha != ir_drop):
+            raise ValueError(
+                "CIMConfig conflicts with the arch's CIM operating point: "
+                f"in_bits {ccfg.in_bits} vs {arch_cfg.cim_in_bits}, "
+                f"out_bits {ccfg.out_bits} vs {arch_cfg.cim_out_bits}, "
+                f"ir_drop {ccfg.nonideal.ir_drop_alpha} vs {ir_drop} — "
+                "set the arch's cim_* fields (serve.py --cim-bits) instead "
+                "of passing a divergent config")
+        return ccfg
     return CIMConfig(
         in_bits=arch_cfg.cim_in_bits, out_bits=arch_cfg.cim_out_bits,
-        nonideal=NonIdealityConfig(
-            ir_drop_alpha=getattr(arch_cfg, "cim_ir_drop", 0.0)))
+        nonideal=NonIdealityConfig(ir_drop_alpha=ir_drop))
 
 
 def _group_alpha(in_alpha, names):
@@ -525,7 +545,7 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
                            in_alpha: float = 3.0,
                            mesh_shape: Optional[Dict[str, int]] = None,
                            spec: Optional[CoreSpec] = None,
-                           mesh=None):
+                           mesh=None, ccfg: Optional[CIMConfig] = None):
     """Compile every packed-servable projection of a transformer onto CIM
     chips and return params augmented with '<name>_cim' entries that
     models/transformer routes through when arch_cfg.cim_mode == "packed".
@@ -554,13 +574,17 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
     packed dispatch; expert-parallel under shard_map on a real mesh).
 
     spec: CoreSpec threaded through to every compile_chip call.
+    ccfg: optional caller-held CIMConfig, validated against the arch's CIM
+    operating point (`arch_cim_config`) — a precision/IR-drop mismatch
+    raises rather than silently deploying at a precision the forward pass
+    does not serve.
     """
     if "layers" not in params or "wq" not in params["layers"]:
         raise ValueError(
             "deploy_transformer_cim covers dense attention+MLP stacks "
             "(params['layers']['wq']); recurrent archs (rwkv6 / mamba2) "
             "deploy through deploy_recurrent_cim")
-    ccfg = arch_cim_config(arch_cfg)
+    ccfg = arch_cim_config(arch_cfg, ccfg)
     spec = spec or CoreSpec()
     mesh, mesh_shape = _resolve_mesh(arch_cfg, mesh, mesh_shape)
 
@@ -631,7 +655,7 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
                          in_alpha: float = 3.0,
                          mesh_shape: Optional[Dict[str, int]] = None,
                          spec: Optional[CoreSpec] = None,
-                         mesh=None):
+                         mesh=None, ccfg: Optional[CIMConfig] = None):
     """Compile a recurrent stack's projections onto CIM chips — the paper's
     versatility claim closed for serving: the same TNSA chips that serve
     CNNs/transformers serve the RWKV-6 and Mamba-2 stacks.
@@ -666,7 +690,7 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
     if not stacked:
         raise ValueError("no recurrent projections found in "
                          f"params['layers'] (expected some of {names})")
-    ccfg = arch_cim_config(arch_cfg)
+    ccfg = arch_cim_config(arch_cfg, ccfg)
     spec = spec or CoreSpec()
     mesh, mesh_shape = _resolve_mesh(arch_cfg, mesh, mesh_shape)
 

@@ -145,14 +145,15 @@ def cim_linear(x, w, cfg: ArchConfig, *, seed: int = 0, packed=None):
         return x @ (w + cfg.cim_noise * wmax * eps)
     if cfg.cim_mode == "chipsim":
         xmax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
-        n_in = (1 << (cfg.cim_in_bits - 1)) - 1
+        # binary (1-bit) inputs keep one magnitude level, not zero
+        n_in = max((1 << (cfg.cim_in_bits - 1)) - 1, 1)
         xq = jnp.round(jnp.clip(x / xmax, -1, 1) * n_in) * (xmax / n_in)
         wmax = jnp.max(jnp.abs(w)).astype(w.dtype)
         eps = hash_normal(w.shape, seed, w.shape[-1]).astype(w.dtype)
         wn = w + cfg.cim_noise * wmax * eps
         y = xq.astype(jnp.float32) @ wn.astype(jnp.float32)
         ymax = jnp.maximum(jnp.max(jnp.abs(y)), 1e-6)
-        n_out = (1 << (cfg.cim_out_bits - 1)) - 1
+        n_out = max((1 << (cfg.cim_out_bits - 1)) - 1, 1)
         yq = jnp.round(jnp.clip(y / ymax, -1, 1) * n_out) * (ymax / n_out)
         return yq.astype(x.dtype)
     raise ValueError(cfg.cim_mode)

@@ -145,7 +145,7 @@ def test_bias_rows_reconstruction_signed_unsigned():
                                    np.asarray(x @ w + b),
                                    rtol=1e-5, atol=1e-5)
         # end-to-end through the chip path (ideal programming)
-        cfg = CIMConfig(in_bits=8, out_bits=10)
+        cfg = CIMConfig(in_bits=8, out_bits=8)
         cl = nn.deploy_linear(jax.random.fold_in(key, 3),
                               {"w": w, "b": b}, cfg, alpha=alpha, x_cal=x,
                               signed=signed, mode="ideal")
