@@ -23,3 +23,16 @@ def best_of(fn, n=5):
         jax.block_until_ready(fn())
         best = min(best, time.time() - t0)
     return best * 1e6
+
+
+def timed_call(fn, *args):
+    """(result, seconds) for ONE dispatch, block_until_ready included —
+    the serve-path per-token clock (launch/scheduler + serve.py). Unlike
+    `best_of` the result is kept (serving steps mutate donated state, so
+    they cannot be re-run for a best-of loop) and compile time is NOT
+    excluded here — callers warm the jit first (scheduler.warmup / the
+    serve drivers' warmup step) and exclude the warmup from stats."""
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

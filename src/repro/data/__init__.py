@@ -1,2 +1,3 @@
 from .synthetic import (cluster_images, keyword_mfcc, binary_patterns,
-                        corrupt_flip, corrupt_occlude, lm_tokens)  # noqa: F401
+                        corrupt_flip, corrupt_occlude, lm_tokens,
+                        Traffic, traffic_requests)  # noqa: F401

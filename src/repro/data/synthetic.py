@@ -87,3 +87,46 @@ def corrupt_occlude(key, v, frac: float = 1 / 3, pixels: int = 784):
 def lm_tokens(key, batch: int, seq: int, vocab: int):
     """Uniform random token ids for LM smoke tests and dry-run feeds."""
     return jax.random.randint(key, (batch, seq), 0, vocab, dtype=jnp.int32)
+
+
+class Traffic(tuple):
+    """Named fields for traffic_requests (NamedTuple via plain tuple would
+    lose names; keep a tiny record type without typing.NamedTuple's
+    jax-pytree surprises)."""
+    __slots__ = ()
+    tokens = property(lambda s: s[0])     # (n, max_len) int32, right-padded 0
+    lengths = property(lambda s: s[1])    # (n,) int32, page multiples
+    mask = property(lambda s: s[2])       # (n, max_len) bool pad mask
+    arrivals = property(lambda s: s[3])   # (n,) f32 Poisson arrival offsets
+    gen = property(lambda s: s[4])        # (n,) int32 tokens to generate
+
+
+def traffic_requests(key, n: int, vocab: int, *, min_len: int = 32,
+                     max_len: int = 96, page: int = 32, rate: float = 50.0,
+                     min_gen: int = 4, max_gen: int = 16) -> Traffic:
+    """Seeded open-loop traffic: n requests with mixed prompt lengths,
+    right-padded token arrays + pad masks, per-request generation budgets,
+    and Poisson arrival times (exponential inter-arrivals at `rate` req/s).
+
+    Prompt lengths are uniform over PAGE MULTIPLES in [min_len, max_len]:
+    the continuous-batching engine's chunked prefill is only bitwise-
+    reproducible against one-shot prefill when chunk boundaries align with
+    the recurrent archs' internal scan chunk (rwkv6: 32 — see
+    launch/scheduler), so the generator quantizes lengths the same way a
+    paged KV allocator quantizes to page size. Shared by
+    benchmarks/bench_serving.py, serve --traffic and the scheduler tests;
+    same key -> identical traffic (determinism test in
+    tests/test_scheduler.py)."""
+    assert min_len % page == 0 and max_len % page == 0 and min_len >= page
+    kl, kt, ka, kg = jax.random.split(key, 4)
+    pages = jax.random.randint(kl, (n,), min_len // page,
+                               max_len // page + 1)
+    lengths = (pages * page).astype(jnp.int32)
+    tokens = jax.random.randint(kt, (n, max_len), 0, vocab, dtype=jnp.int32)
+    mask = jnp.arange(max_len)[None, :] < lengths[:, None]
+    tokens = jnp.where(mask, tokens, 0)
+    inter = jax.random.exponential(ka, (n,)) / rate
+    arrivals = jnp.cumsum(inter).astype(jnp.float32)
+    gen = jax.random.randint(kg, (n,), min_gen, max_gen + 1,
+                             dtype=jnp.int32)
+    return Traffic((tokens, lengths, mask, arrivals, gen))

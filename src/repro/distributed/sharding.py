@@ -112,6 +112,25 @@ def cache_pspecs(cache_tree, data_axes=("pod", "data"),
     return jax.tree_util.tree_map_with_path(spec, cache_tree)
 
 
+def pool_pspecs(pool_tree, data_axes=("data",)) -> Any:
+    """Sharding for the continuous-batching slot pool (launch/scheduler):
+    the SLOT dim — axis 1 on every cache/state leaf, axis 0 on the per-slot
+    `len`/`active`/`tok` bookkeeping vectors — shards over the data axes,
+    so throughput scales by replicating the weight-stationary chip stack
+    and striping request slots across the 'data' axis. Nothing else is
+    partitioned: packed CIM serving keeps activations whole per slot (the
+    'model' axis belongs to the chip-shard dispatch, not the pool)."""
+    def spec(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        last = keys[-1] if keys else ""
+        if last in ("len", "active", "tok"):
+            return P(data_axes)
+        if leaf.ndim >= 2:
+            return P(None, data_axes, *([None] * (leaf.ndim - 2)))
+        return P()
+    return jax.tree_util.tree_map_with_path(spec, pool_tree)
+
+
 def opt_pspecs(params_specs) -> Dict:
     """AdamW state shards like its params; step counter replicated."""
     return {"m": params_specs, "v": params_specs, "t": P()}

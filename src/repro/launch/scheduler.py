@@ -1,0 +1,383 @@
+"""Continuous-batching serving engine: a slotted KV/state pool + the
+request scheduler that drives it.
+
+The paper's chip stacks are weight-stationary — one compiled chip serves
+every in-flight request — so request-level serving is purely a cache and
+scheduling layer over `launch/steps.arch_serving`:
+
+  * Slot pool (`init_pool`): the batch dimension of the arch's native
+    cache/state pytree becomes a pool of request slots. Per-slot sequence
+    state covers dense KV caches AND the recurrent archs' S/h state (rwkv6 /
+    mamba2 / zamba2 hybrid KV) uniformly, because every cache leaf keeps the
+    slot dim at axis 1. The free-slot bitmap (`active`), each slot's last
+    token (`tok`) and per-slot fill length (`len`, widened from the static
+    path's scalar) live INSIDE the donated pool pytree as arrays — admission
+    and eviction mutate values, never pytree structure, so the decode jit
+    traces exactly ONCE across all occupancy changes.
+  * Admission / eviction: between decode steps the host assigns free slots
+    to arrived requests (FIFO, lowest slot first, never double-assigned),
+    resets the slot's state to zeros, and chunk-prefills the prompt into it;
+    a finished request just flips its `active` bit off — the slot is
+    immediately reusable because admission resets it.
+  * Chunked prefill interleaved with decode: prompts are split into
+    `chunk`-sized pieces (default 32 — aligned with the recurrent archs'
+    internal scan chunk, see below) and at most ONE chunk runs per engine
+    iteration, so a long prompt never stalls in-flight decodes by more than
+    one chunk's latency. The chunk engine is the arch's EXISTING chunked
+    prefill (PR 3), run on a single-slot view of the pool
+    (steps.make_slot_prefill_step).
+
+Correctness contract (enforced by tests/test_scheduler.py): a request
+served through the slotted pool is BITWISE-equal — logits, CIM ADC-count
+path included — to the same request served alone through the static
+serve.py path, for dense, MoE and recurrent archs. Three properties make
+that hold:
+
+  * packed CIM quantization uses static per-layer PACT alphas, and every
+    per-row computation (matmul rows, softmax, norms) is independent of
+    which other slots are occupied;
+  * MoE dispatch must be DROPLESS (cfg.moe_dropless, forced on by this
+    engine): with finite expert capacity a token's output depends on which
+    other tokens compete for capacity — co-batched requests would perturb
+    each other;
+  * recurrent chunked-scan state (rwkv6 chunk=32, mamba2 chunk=64) is only
+    reassociation-free when prefill chunk boundaries align with the
+    internal scan chunk — hence chunk defaults to 32 and the traffic
+    generator quantizes prompt lengths to a page multiple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .steps import (POOL_KEYS, arch_serving, make_pool_decode_step,
+                    make_slot_prefill_step)
+
+try:  # canonical serve-path clock (benchmarks/_timing, satellite of ISSUE 7)
+    from benchmarks._timing import timed_call
+except ImportError:  # repro imported without the repo root on sys.path
+    def timed_call(fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0
+
+
+def init_pool(cfg, n_slots: int, max_len: int, mesh=None):
+    """Slot pool pytree: the arch's native cache with `len` widened to a
+    per-slot (n_slots,) vector, plus the `active` bitmap and per-slot last
+    token. With a mesh, leaves are placed per
+    distributed/sharding.pool_pspecs (slot dim over the 'data' axis)."""
+    sv = arch_serving(cfg)
+    pool = dict(sv.init_state(n_slots, max_len))
+    pool["len"] = jnp.zeros((n_slots,), jnp.int32)
+    pool["active"] = jnp.zeros((n_slots,), bool)
+    pool["tok"] = jnp.zeros((n_slots, 1), jnp.int32)
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from ..distributed.sharding import pool_pspecs
+        specs = pool_pspecs(pool)
+        pool = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            pool, specs)
+    return pool
+
+
+def _reset_slot(pool, slot):
+    """Zero one slot's sequence state + bookkeeping (admission reset)."""
+    out = {}
+    for k, a in pool.items():
+        if k in ("len", "active"):
+            out[k] = a.at[slot].set(0 if k == "len" else False)
+        elif k == "tok":
+            out[k] = a.at[slot, 0].set(0)
+        else:
+            out[k] = a.at[:, slot].set(jnp.zeros((), a.dtype))
+    return out
+
+
+def _set_active(pool, slot, flag):
+    return dict(pool, active=pool["active"].at[slot].set(flag))
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. `arrival` is seconds relative to run start
+    (open-loop traffic); results are filled in by the engine."""
+    rid: int
+    prompt: np.ndarray                   # (L,) int32
+    max_new: int
+    arrival: float = 0.0
+    # results
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    token_lat: List[float] = dataclasses.field(default_factory=list)
+    t_first: float = -1.0                # arrival -> first token (TTFT)
+    t_done: float = -1.0
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    slot: int
+    req: Request
+    chunks: List[np.ndarray]
+    next: int = 0
+
+
+class ContinuousBatchingEngine:
+    """Request-level continuous batching over one compiled chip stack.
+
+    One decode trace serves every occupancy pattern; admission, eviction
+    and chunked prefill are value-level updates on the donated pool.
+    `capture_logits=True` records each request's per-token logits rows
+    (numpy) — the bitwise pool-vs-static contract is asserted on these.
+    """
+
+    def __init__(self, cfg, params, n_slots: int, max_len: int, *,
+                 chunk: int = 32, mesh=None, capture_logits: bool = False):
+        if cfg.n_experts > 0 and not cfg.moe_dropless:
+            # engine-owned contract: co-batched requests must not compete
+            # for expert capacity (see module docstring)
+            cfg = cfg.replace(moe_dropless=True)
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.capture_logits = capture_logits
+        self.pool = init_pool(cfg, n_slots, max_len, mesh=mesh)
+        # On a mesh, pin every jit's pool output to the canonical
+        # pool_pspecs NamedShardings. Without this GSPMD re-shards cache
+        # leaves as it likes and returns fresh GSPMDSharding objects each
+        # call — the C++ pjit call cache then misses every step (slow-path
+        # dispatch) and the one-trace contract metric inflates with it.
+        ns = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from ..distributed.sharding import pool_pspecs
+            ns = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), pool_pspecs(self.pool))
+        self._decode = jax.jit(
+            make_pool_decode_step(cfg), donate_argnums=(1,),
+            **({"out_shardings": (None, ns)} if ns is not None else {}))
+        self._prefill = jax.jit(
+            make_slot_prefill_step(cfg), donate_argnums=(1,),
+            **({"out_shardings": (None, ns)} if ns is not None else {}))
+        self._reset = jax.jit(
+            _reset_slot, donate_argnums=(0,),
+            **({"out_shardings": ns} if ns is not None else {}))
+        self._activate = jax.jit(
+            _set_active, donate_argnums=(0,), static_argnums=(2,),
+            **({"out_shardings": ns} if ns is not None else {}))
+        self._free = list(range(n_slots))      # host mirror of ~active
+        self._live: Dict[int, Request] = {}    # slot -> decoding request
+        self._jobs: deque = deque()            # chunked prefills in flight
+
+    # ------------------------------------------------------------- plumbing
+
+    def decode_traces(self) -> int:
+        """Compiled-trace count of the pool decode step (contract: 1)."""
+        return self._decode._cache_size()
+
+    def _chunks(self, prompt: np.ndarray) -> List[np.ndarray]:
+        c = self.chunk
+        return [prompt[i:i + c] for i in range(0, len(prompt), c)]
+
+    def warmup(self, chunk_lens) -> None:
+        """Compile the decode step and each distinct prefill-chunk length
+        on the (empty) pool, then reset the scratch slot — keeps compile
+        time out of every reported latency without a scratch pool."""
+        for n in sorted(set(chunk_lens)):
+            toks = jnp.zeros((1, int(n)), jnp.int32)
+            _, self.pool = self._prefill(self.params, self.pool, toks,
+                                         jnp.int32(0))
+        self.pool = self._reset(self.pool, jnp.int32(0))
+        _, self.pool = self._decode(self.params, self.pool)
+        jax.block_until_ready(self.pool)
+
+    # ------------------------------------------------------------ scheduling
+
+    def _admit(self, req: Request) -> None:
+        assert len(req.prompt) + req.max_new <= self.max_len, \
+            f"request {req.rid} would overflow the slot (max_len)"
+        slot = self._free.pop(0)
+        assert slot not in self._live, "slot double-assign"
+        self.pool = self._reset(self.pool, jnp.int32(slot))
+        self._jobs.append(_PrefillJob(slot, req, self._chunks(req.prompt)))
+
+    def _finish(self, slot: int, now: float) -> None:
+        req = self._live.pop(slot)
+        req.t_done = now
+        self.pool = self._activate(self.pool, jnp.int32(slot), False)
+        self._free.append(slot)
+        self._free.sort()
+
+    def _prefill_one_chunk(self, now: float) -> float:
+        """Run ONE chunk of the oldest in-flight prefill; returns step
+        seconds. On the final chunk the slot goes live (its first token was
+        seeded into pool['tok'] by the chunk step)."""
+        job = self._jobs[0]
+        toks = jnp.asarray(job.chunks[job.next][None], jnp.int32)
+        (logits, self.pool), dt = timed_call(
+            self._prefill, self.params, self.pool, toks, jnp.int32(job.slot))
+        job.next += 1
+        if job.next == len(job.chunks):
+            self._jobs.popleft()
+            req = job.req
+            first = int(np.argmax(np.asarray(logits[0])))
+            req.tokens.append(first)
+            req.token_lat.append(dt)
+            req.t_first = now + dt - req.arrival
+            if self.capture_logits:
+                req.logits.append(np.asarray(logits[0]))
+            if req.max_new == 1:
+                req.t_done = now + dt
+                self.pool = self._reset(self.pool, jnp.int32(job.slot))
+                self._free.append(job.slot)
+                self._free.sort()
+            else:
+                self.pool = self._activate(self.pool, jnp.int32(job.slot),
+                                           True)
+                self._live[job.slot] = req
+        return dt
+
+    def _decode_once(self, now: float) -> float:
+        (logits, self.pool), dt = timed_call(self._decode, self.params,
+                                             self.pool)
+        toks = np.asarray(self.pool["tok"][:, 0])
+        done = []
+        for slot, req in self._live.items():
+            req.tokens.append(int(toks[slot]))
+            req.token_lat.append(dt)
+            if self.capture_logits:
+                req.logits.append(np.asarray(logits[slot]))
+            if len(req.tokens) >= req.max_new:
+                done.append(slot)
+        for slot in done:
+            self._finish(slot, now + dt)
+        return dt
+
+    # -------------------------------------------------------------- serving
+
+    def run(self, requests: List[Request], *, warm: bool = True,
+            realtime: bool = True) -> Dict[str, Any]:
+        """Open-loop serve: requests arrive at their `arrival` offsets
+        whether or not the engine keeps up. Returns summary stats; per-token
+        detail lands on each Request. With realtime=False arrival times are
+        ignored (everything is admitted as soon as a slot frees up) — used
+        by tests for deterministic scheduling."""
+        if warm:
+            self.warmup({c.shape[0] for r in requests
+                         for c in self._chunks(r.prompt)})
+        pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        t0 = time.perf_counter()
+        step_lat: List[float] = []
+        while pending or self._jobs or self._live:
+            now = time.perf_counter() - t0
+            while pending and self._free and \
+                    (not realtime or pending[0].arrival <= now):
+                self._admit(pending.popleft())
+            busy = False
+            if self._jobs:
+                self._prefill_one_chunk(now)
+                busy = True
+            if self._live:
+                step_lat.append(self._decode_once(now))
+                busy = True
+            if not busy:
+                # idle: nothing in flight, next request not yet arrived
+                if pending and realtime:
+                    wait = pending[0].arrival - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+        wall = time.perf_counter() - t0
+        lats = np.asarray([dt for r in requests for dt in r.token_lat])
+        total = sum(len(r.tokens) for r in requests)
+        return {
+            "requests": len(requests),
+            "tokens": total,
+            "wall_s": wall,
+            "tok_per_s": total / wall if wall > 0 else 0.0,
+            "p50_ms": float(np.percentile(lats, 50) * 1e3) if total else 0.0,
+            "p99_ms": float(np.percentile(lats, 99) * 1e3) if total else 0.0,
+            "ttft_p50_ms": float(np.percentile(
+                [r.t_first for r in requests], 50) * 1e3) if requests else 0.0,
+            "decode_traces": self.decode_traces(),
+        }
+
+
+def serve_static(cfg, params, requests: List[Request], batch: int,
+                 max_len: int, *, capture_logits: bool = False,
+                 realtime: bool = True) -> Dict[str, Any]:
+    """The static-batch baseline at equal request load: requests are taken
+    in arrival order, grouped into fixed batches of `batch`, prompts padded
+    to the group max, prefilled once, then decoded in lockstep until every
+    member hits its max_new (today's serve.py loop). Used by
+    benchmarks/bench_serving.py as the tokens/sec comparison point."""
+    from .steps import make_decode_step
+    sv = arch_serving(cfg)
+    prefill = jax.jit(sv.prefill)
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    groups = [reqs[i:i + batch] for i in range(0, len(reqs), batch)]
+    # warmup: compile each distinct (group size, padded prompt len) prefill
+    # shape and the decode step before the clock starts — same treatment as
+    # the continuous engine's warmup, so neither side pays compile time
+    for gb, lp in sorted({(len(g), max(len(r.prompt) for r in g))
+                          for g in groups}):
+        cache = sv.init_state(gb, max_len)
+        logits, cache = prefill(params, cache,
+                                jnp.zeros((gb, lp), jnp.int32))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(decode(params, cache, tok))
+    t0 = time.perf_counter()
+    for group in groups:
+        if realtime:  # the whole batch must have arrived before it forms
+            wait = max(r.arrival for r in group) - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+        lp = max(len(r.prompt) for r in group)
+        prompts = np.zeros((len(group), lp), np.int32)
+        for j, r in enumerate(group):
+            prompts[j, lp - len(r.prompt):] = r.prompt  # left-pad
+        cache = sv.init_state(len(group), max_len)
+        (logits, cache), dt = timed_call(prefill, params, cache,
+                                         jnp.asarray(prompts))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        now = time.perf_counter() - t0
+        for j, r in enumerate(group):
+            r.tokens.append(int(tok[j, 0]))
+            r.token_lat.append(dt)
+            r.t_first = now - r.arrival
+            if capture_logits:
+                r.logits.append(np.asarray(logits[j]))
+        gen_max = max(r.max_new for r in group)
+        for _ in range(gen_max - 1):
+            (logits, cache), dt = timed_call(decode, params, cache, tok)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            now = time.perf_counter() - t0
+            for j, r in enumerate(group):
+                if len(r.tokens) < r.max_new:  # lockstep: extras discarded
+                    r.tokens.append(int(tok[j, 0]))
+                    r.token_lat.append(dt)
+                    if capture_logits:
+                        r.logits.append(np.asarray(logits[j]))
+        for r in group:
+            r.t_done = time.perf_counter() - t0
+    wall = time.perf_counter() - t0
+    lats = np.asarray([dt for r in reqs for dt in r.token_lat])
+    total = sum(len(r.tokens) for r in reqs)
+    return {
+        "requests": len(reqs),
+        "tokens": total,
+        "wall_s": wall,
+        "tok_per_s": total / wall if wall > 0 else 0.0,
+        "p50_ms": float(np.percentile(lats, 50) * 1e3) if total else 0.0,
+        "p99_ms": float(np.percentile(lats, 99) * 1e3) if total else 0.0,
+    }

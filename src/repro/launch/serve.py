@@ -1,13 +1,29 @@
-"""Batched serving driver: prefill + decode with a KV cache.
+"""Serving driver: static-batch and continuous-batching request serving.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 64 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --smoke \
+      --cim --traffic --requests 8 --slots 4
 
-Implements static-batch continuous decoding: a request batch is prefilled
-once, then decoded token-by-token (greedy) with the cache updated in place
-(donated). Reports prefill and per-token decode latency. On the production
-mesh the cache shards (batch over data axes, head_dim over model) per
-distributed/sharding.py.
+Two serving modes share one compiled chip stack (weight-stationary: the
+same programmed conductances serve every request):
+
+  * default (static batch): one fixed request batch is prefilled once,
+    then decoded token-by-token in lockstep (greedy) with the cache
+    updated in place (donated). Both the prefill and decode jits are
+    timed through benchmarks/_timing.timed_call — block_until_ready
+    around each step, warmup (compile) excluded from the per-token stats.
+  * --traffic (continuous batching): an open-loop Poisson request stream
+    (data/synthetic.traffic_requests — mixed prompt lengths, per-request
+    generation budgets) drives launch/scheduler.ContinuousBatchingEngine:
+    a slotted KV/state pool with request admission + eviction between
+    decode steps and chunked prefill interleaved with decode. Reports
+    p50/p99 token latency, TTFT and tokens/sec. The decode jit traces
+    ONCE across all occupancy changes (enforced here: trace count is
+    printed and asserted).
+
+On the production mesh the cache/pool shards (slot dim over data axes)
+per distributed/sharding.py (cache_pspecs / pool_pspecs).
 
 --cim routes every packed-servable projection (dense blocks, shared experts,
 MoE routed-expert stacks, AND the recurrent stacks — rwkv6 time/channel
@@ -54,6 +70,7 @@ import jax.numpy as jnp
 from .. import configs
 from ..models import transformer as T
 from ..data import lm_tokens
+from .scheduler import timed_call
 from .steps import arch_serving, make_decode_step
 
 
@@ -64,6 +81,20 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--traffic", action="store_true",
+                    help="continuous-batching mode: serve an open-loop "
+                         "Poisson request stream through the slotted pool "
+                         "(launch/scheduler) instead of one static batch")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--traffic: number of requests in the stream")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="--traffic: pool slots (0 = --batch)")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="--traffic: prefill chunk size (keep a multiple "
+                         "of 32 so recurrent-arch chunked prefill stays "
+                         "bitwise vs one-shot)")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="--traffic: Poisson arrival rate (req/s)")
     ap.add_argument("--cim", action="store_true",
                     help="serve dense-block projections through the packed "
                          "CIM engine (programs the chip before serving)")
@@ -146,6 +177,9 @@ def main(argv=None):
               f"bits={cfg.cim_in_bits}/{cfg.cim_out_bits}, "
               f"tp={tp}, exec={exec_mode}) "
               f"in {time.time() - t0:.1f}s")
+    if args.traffic:
+        return _serve_traffic(args, cfg, params, mesh)
+
     max_len = args.prompt_len + args.gen + (cfg.vis_patches or 0)
     cache = sv.init_state(args.batch, max_len)
     prompts = lm_tokens(jax.random.PRNGKey(1), args.batch, args.prompt_len,
@@ -157,33 +191,82 @@ def main(argv=None):
                                         cfg.d_model), cfg.dtype)
         memory = T._encode(params, src, cfg)
 
+    prefill = jax.jit(sv.prefill)
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
-    t0 = time.time()
-    logits, cache = sv.prefill(params, cache, prompts, memory=memory)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+    # timed_call (benchmarks/_timing): block_until_ready around the step.
+    # The first prefill/decode dispatch carries compile time, so per-token
+    # stats start at the second decode step (warmup excluded).
+    (logits, cache), t_prefill = timed_call(prefill, params, cache, prompts,
+                                            memory)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
     generated = [tok]
-    t0 = time.time()
+    step_lat = []
     for i in range(args.gen - 1):
         batch = {"tokens": tok}
         if memory is not None:
             batch["memory"] = memory
-        logits, cache = decode(params, cache, batch)
+        (logits, cache), dt = timed_call(decode, params, cache, batch)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         generated.append(tok)
-    tok.block_until_ready()
-    t_decode = (time.time() - t0) / max(args.gen - 1, 1)
+        if i > 0:                       # step 0 compiles the decode jit
+            step_lat.append(dt)
+    t_decode = (sum(step_lat) / len(step_lat)) if step_lat else 0.0
     out = jnp.concatenate(generated, axis=1)
     tag = " cim=packed" if args.cim else ""
+    thr = (args.batch / t_decode) if t_decode else float("nan")
     print(f"arch={cfg.name}{tag} batch={args.batch} "
           f"prefill={t_prefill*1e3:.1f}ms "
           f"decode={t_decode*1e3:.1f}ms/tok "
-          f"throughput={args.batch/t_decode:.1f} tok/s")
+          f"throughput={thr:.1f} tok/s")
     print("sample token ids:", out[0, :16].tolist())
     return out
+
+
+def _serve_traffic(args, cfg, params, mesh=None):
+    """Continuous-batching mode: open-loop Poisson traffic through the
+    slotted pool (launch/scheduler.ContinuousBatchingEngine). On a real
+    mesh the pool itself is placed per distributed/sharding.pool_pspecs
+    (slot dim over 'data') so every engine jit sees stable shardings —
+    required for the one-decode-trace contract."""
+    import numpy as np
+    from ..data import traffic_requests
+    from .scheduler import ContinuousBatchingEngine, Request
+
+    if cfg.enc_layers > 0 or cfg.vis_patches > 0:
+        raise SystemExit("--traffic serves decoder-only archs (enc-dec / "
+                         "vlm prefixes need per-slot memory plumbing)")
+    slots = args.slots or args.batch
+    page = args.chunk
+    min_len = page
+    max_prompt = max(args.prompt_len - args.prompt_len % page, page)
+    gen_hi = max(args.gen, 2)
+    tr = traffic_requests(jax.random.PRNGKey(1), args.requests, cfg.vocab,
+                          min_len=min_len, max_len=max_prompt, page=page,
+                          rate=args.rate, min_gen=max(args.gen // 2, 1),
+                          max_gen=gen_hi)
+    max_len = max_prompt + gen_hi
+    toks = np.asarray(tr.tokens)
+    lens = np.asarray(tr.lengths)
+    reqs = [Request(rid=i, prompt=toks[i, :lens[i]],
+                    max_new=int(tr.gen[i]), arrival=float(tr.arrivals[i]))
+            for i in range(args.requests)]
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=slots,
+                                   max_len=max_len, chunk=args.chunk,
+                                   mesh=mesh)
+    stats = eng.run(reqs)
+    assert stats["decode_traces"] == 1, \
+        f"decode retraced across occupancy changes: {stats['decode_traces']}"
+    tag = " cim=packed" if args.cim else ""
+    print(f"arch={cfg.name}{tag} traffic: {stats['requests']} reqs "
+          f"slots={slots} chunk={args.chunk} rate={args.rate}/s -> "
+          f"{stats['tokens']} tokens in {stats['wall_s']:.2f}s "
+          f"({stats['tok_per_s']:.1f} tok/s) "
+          f"p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
+          f"ttft_p50={stats['ttft_p50_ms']:.1f}ms "
+          f"decode_traces={stats['decode_traces']}")
+    return stats
 
 
 if __name__ == "__main__":

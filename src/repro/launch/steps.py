@@ -192,3 +192,77 @@ def make_decode_step(cfg: T.ArchConfig):
         tokens = batch["tokens"] if isinstance(batch, dict) else batch
         return sv.decode_step(params, cache, tokens, memory=memory)
     return decode_step
+
+
+# ------------------------------------------------- slotted pool (scheduler)
+
+# Bookkeeping leaves the continuous-batching pool adds ON TOP of the arch's
+# native cache/state pytree (launch/scheduler.init_pool). They live INSIDE
+# the donated pytree so occupancy changes mutate array values, never pytree
+# structure — the decode jit traces exactly once.
+#   active: (B,) bool   slot is decoding (free-slot bitmap = ~active)
+#   tok:    (B,1) int32 each slot's last emitted token (decode input)
+# The arch-native "len" leaf is widened from a scalar to a per-slot (B,)
+# vector; models/transformer.decode_step branches on its ndim.
+POOL_KEYS = ("active", "tok")
+
+
+def _split_pool(pool):
+    """pool -> (arch-native cache/state view, active, tok)."""
+    native = {k: v for k, v in pool.items() if k not in POOL_KEYS}
+    return native, pool["active"], pool["tok"]
+
+
+def make_pool_decode_step(cfg: T.ArchConfig):
+    """One decode step over the WHOLE slot pool: (params, pool) ->
+    (logits (B,V), pool). Every slot steps through the model (the compiled
+    chips are weight-stationary — one dispatch serves all in-flight
+    requests); inactive slots are then frozen by a select against the
+    `active` bitmap, so their state is bit-identical across steps and the
+    emitted token / fill length only advance for live requests."""
+    sv = arch_serving(cfg)
+
+    def step(params, pool):
+        native, active, tok = _split_pool(pool)
+        logits, new = sv.decode_step(params, native, tok)
+        out = {}
+        for k, n in new.items():
+            old = native[k]
+            if k == "len":                       # (B,) per-slot fill
+                out[k] = jnp.where(active, n, old)
+            else:                                # slot dim is axis 1
+                m = active.reshape((1, -1) + (1,) * (n.ndim - 2))
+                out[k] = jnp.where(m, n, old)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out["tok"] = jnp.where(active[:, None], nxt, tok)
+        out["active"] = active
+        return logits, out
+    return step
+
+
+def make_slot_prefill_step(cfg: T.ArchConfig):
+    """One prefill CHUNK into a single slot: (params, pool, tokens (1,C),
+    slot) -> (logits (1,V), pool). The slot's state is sliced out of the
+    pool (every cache/state leaf keeps the slot dim at axis 1 — the layout
+    invariant distributed/sharding.cache_pspecs already relies on), run
+    through the arch's EXISTING chunked prefill with a scalar fill length,
+    and written back at the slot offset. The slot index is traced, so all
+    chunks of one length share one trace; the chunk logits' argmax lands in
+    pool['tok'] so the final chunk seeds the slot's first decode token."""
+    sv = arch_serving(cfg)
+
+    def chunk_step(params, pool, tokens, slot):
+        native, active, tok = _split_pool(pool)
+        view = {k: (v[slot] if k == "len"
+                    else jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=1))
+                for k, v in native.items()}
+        logits, view = sv.prefill(params, view, tokens)
+        out = {k: (native["len"].at[slot].set(v) if k == "len"
+                   else jax.lax.dynamic_update_slice_in_dim(
+                       native[k], v, slot, axis=1))
+               for k, v in view.items()}
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        out["tok"] = tok.at[slot, 0].set(first)
+        out["active"] = active
+        return logits, out
+    return chunk_step

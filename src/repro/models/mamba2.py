@@ -272,7 +272,10 @@ def decode_step(params, state, tokens, cfg):
     nh = d_in // cfg.ssm_head
     ph = cfg.ssm_head
     every = cfg.hybrid_attn_every or cfg.n_layers
+    # scalar on the static path, per-slot (B,) on the pool path — the hybrid
+    # shared-attn block then gets batched positions + per-slot cache fill
     pos = state["len"]
+    attn_pos = pos[None] if pos.ndim == 0 else pos[:, None]
 
     def mamba_step(x, inp):
         p, h0 = inp
@@ -311,7 +314,7 @@ def decode_step(params, state, tokens, cfg):
         nk = nv = ck
         if cfg.hybrid_attn_every > 0:
             y, (nk, nv) = dense_block(params["shared_attn"], x[:, None], cfg,
-                                      positions=pos[None], layer_idx=0,
+                                      positions=attn_pos, layer_idx=0,
                                       cache=(ck, cv), cache_len=pos)
             x = y[:, 0]
         return (x,), (h_new, nk, nv)

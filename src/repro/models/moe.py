@@ -105,7 +105,16 @@ def moe_ffn(p: Dict, x, cfg, capacity_factor: float = 1.25):
     order = jnp.argsort(flat_e)                         # stable sort by expert
     se, st, sg = flat_e[order], flat_t[order], flat_g[order]
 
-    cap = min(max(int(math.ceil(t * k / e * capacity_factor)), 4), t * k)
+    if getattr(cfg, "moe_dropless", False):
+        # Dropless: capacity = one slot per token per expert (top_k indices
+        # are distinct, so an expert sees each token at most once). No token
+        # is ever dropped -> a token's output no longer depends on which
+        # other tokens share the batch. Required by the continuous-batching
+        # pool (launch/scheduler), where co-batched requests must be
+        # bitwise-independent.
+        cap = t
+    else:
+        cap = min(max(int(math.ceil(t * k / e * capacity_factor)), 4), t * k)
     # position of each sorted slot within its expert group
     ones = jnp.ones_like(se)
     pos_in_e = jnp.cumsum(ones) - 1

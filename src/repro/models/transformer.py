@@ -72,6 +72,12 @@ class ArchConfig:
     # GSPMD may propagate FSDP param shardings into activations (replicating
     # tokens and sharding d_model), multiplying compute per device.
     batch_axes: Any = None
+    # Dropless MoE dispatch: per-expert capacity = every routed token kept
+    # (cap = T). The capacity-factor path makes a token's output depend on
+    # which OTHER tokens share the batch (capacity competition) — fine for
+    # training throughput, wrong for request-level serving where co-batched
+    # requests must not perturb each other. launch/scheduler forces this on.
+    moe_dropless: bool = False
     # Perf knobs (EXPERIMENTS.md §Perf):
     remat: str = "minimal"       # minimal (nothing_saveable) | dots
     seq_shard: bool = False      # Megatron-SP: activations seq-sharded on
@@ -213,18 +219,27 @@ def _softcap(x, cap: float):
 
 
 def _attn_mask(q_pos, kv_pos, causal, window, kv_len):
-    """(Sq, Sk) boolean mask; `window` may be a Python int or traced scalar
-    (0 / false-y means no window)."""
-    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    """Boolean mask, (Sq, Sk) — or (B, Sq, Sk) when q_pos is (B, Sq) and/or
+    kv_len is (B,) (slotted-pool decode: every request sits at its own
+    position). `window` may be a Python int or traced scalar (0 / false-y
+    means no window)."""
+    dist = q_pos[..., :, None] - kv_pos[None, :]
+    mask = jnp.ones(dist.shape, bool)
     if causal:
-        mask &= q_pos[:, None] >= kv_pos[None, :]
-    dist = q_pos[:, None] - kv_pos[None, :]
+        mask &= dist >= 0
     mask &= jnp.where(window > 0, dist < window, True) \
         if isinstance(window, jax.Array) else \
         ((dist < window) if window > 0 else True)
     if kv_len is not None:          # decode: mask beyond current cache fill
-        mask &= kv_pos[None, :] < kv_len
+        kl = jnp.asarray(kv_len)
+        mask &= (kv_pos < kl) if kl.ndim == 0 \
+            else kv_pos[None, None, :] < kl[:, None, None]
     return mask
+
+
+def _expand_mask(mask):
+    """Broadcast an (Sq,Sk) or (B,Sq,Sk) mask against (B,H,Sq,Sk) logits."""
+    return mask[None, None] if mask.ndim == 2 else mask[:, None]
 
 
 # KV chunk size above which attention switches to the online-softmax
@@ -251,7 +266,7 @@ def attention(q, k, v, *, causal: bool, q_pos, kv_pos, window=0,
         logits = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * scale
         logits = _softcap(logits, softcap)
         mask = _attn_mask(q_pos, kv_pos, causal, window, kv_len)
-        logits = jnp.where(mask[None, None], logits.astype(jnp.float32),
+        logits = jnp.where(_expand_mask(mask), logits.astype(jnp.float32),
                            -1e30)
         probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
         return jnp.einsum("bhqk,bkhd->bqhd", probs, v if rep == 1 else vf)
@@ -272,7 +287,7 @@ def attention(q, k, v, *, causal: bool, q_pos, kv_pos, window=0,
         logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kč) * scale
         logits = _softcap(logits, softcap)
         mask = _attn_mask(q_pos, posč, causal, window, kv_len)
-        logits = jnp.where(mask[None, None], logits, -1e30)
+        logits = jnp.where(_expand_mask(mask), logits, -1e30)
         m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(logits - m_new[..., None])
@@ -436,8 +451,14 @@ def dense_block(p, x, cfg: ArchConfig, *, positions, layer_idx,
     new_cache = None
     if cache is not None:
         ck, cv = cache                           # (B, S_max, nkv, hd)
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, cache_len, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, cache_len, axis=1)
+        if jnp.ndim(cache_len) == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, cache_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, cache_len, axis=1)
+        else:                                    # per-slot fill (pool decode)
+            sidx = cache_len[:, None] + jnp.arange(s)[None]      # (B, s)
+            bidx = jnp.arange(b)[:, None]
+            ck = ck.at[bidx, sidx].set(k)
+            cv = cv.at[bidx, sidx].set(v)
         kv_pos = jnp.arange(ck.shape[1])
         attn = _attention_window(q, ck, cv, positions, kv_pos, window, cfg,
                                  kv_len=cache_len + s, causal=True)
@@ -635,8 +656,13 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, memory=None):
     x = params["embed"][tokens].astype(cfg.dtype)
     if cfg.name.startswith("gemma"):
         x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    # cache["len"] is a scalar on the static path and a per-slot (B,) vector
+    # on the continuous-batching pool path (launch/scheduler): positions and
+    # the kv-fill mask then carry a batch dim, and the cache update scatters
+    # at each slot's own fill offset.
     pos = cache["len"]
-    positions = pos + jnp.arange(tokens.shape[1])
+    positions = pos + jnp.arange(tokens.shape[1]) if pos.ndim == 0 \
+        else pos[:, None] + jnp.arange(tokens.shape[1])[None]
 
     interleaved = "dense_layers" in params
 

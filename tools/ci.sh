@@ -20,9 +20,15 @@
 # serve-smoke that reruns serving on 8 forced host devices — prefill +
 # decode through the real-mesh shard_map TP path (--cim-mesh auto, one
 # engine per 'model'-axis device) for a dense, an MoE and a recurrent
-# arch — and a recover-smoke that serves the bidirectional RBM
+# arch — a recover-smoke that serves the bidirectional RBM
 # image-recovery workload (packed fwd + transpose-direction dispatches of
-# one compiled chip; >=50% L2-error reduction enforced by the driver).
+# one compiled chip; >=50% L2-error reduction enforced by the driver), a
+# traffic-smoke that serves open-loop Poisson traffic through the
+# continuous-batching slot pool (launch/scheduler: admission/eviction +
+# chunked prefill interleaved with decode, CIM packed path, dense +
+# recurrent, one decode trace asserted), and a serving-bench-smoke that
+# runs benchmarks/bench_serving.py in quick mode (continuous vs static
+# serving of one seeded stream) into BENCH_serving.json.
 # The bench gate is split by determinism: the
 # one-trace-per-plan contract always fails the run (fused/partial
 # scheduled rows included), while the wall-clock gates — "scheduled no
@@ -75,6 +81,30 @@ recover_smoke() {
   python -m repro.launch.recover --smoke
 }
 
+traffic_smoke() {
+  echo "== traffic-smoke: continuous batching on 8 forced devices =="
+  # open-loop Poisson traffic through the slotted pool
+  # (launch/scheduler) for a dense and a recurrent arch on the packed
+  # CIM path; serve.py itself asserts ONE decode trace across all
+  # admission/eviction occupancy changes
+  local flags="--xla_force_host_platform_device_count=8"
+  XLA_FLAGS="$flags" python -m repro.launch.serve --smoke --cim --traffic \
+    --arch gemma2-9b --requests 6 --slots 2 --prompt-len 64 --gen 4 \
+    --rate 200
+  XLA_FLAGS="$flags" python -m repro.launch.serve --smoke --cim --traffic \
+    --arch rwkv6-7b --requests 6 --slots 2 --prompt-len 64 --gen 4 \
+    --rate 200
+}
+
+serving_bench_smoke() {
+  echo "== serving-bench-smoke: continuous vs static traffic =="
+  # one seeded request stream served twice (slotted pool vs static
+  # batches) into BENCH_serving.json; the one-decode-trace contract
+  # always fails the run, the continuous>static tokens/sec gate warns
+  # here and is enforced in the dedicated bench tier
+  python -m benchmarks.bench_serving --quick --out BENCH_serving.json "$@"
+}
+
 tier="${1:-fast}"
 case "$tier" in
   fast)
@@ -83,8 +113,13 @@ case "$tier" in
     serve_smoke
     mesh_serve_smoke
     recover_smoke
+    traffic_smoke
+    serving_bench_smoke
     ;;
   full) exec python -m pytest -x -q ;;
-  bench) bench_smoke --enforce-timing ;;
+  bench)
+    bench_smoke --enforce-timing
+    serving_bench_smoke --enforce-timing
+    ;;
   *) echo "usage: tools/ci.sh [fast|full|bench]" >&2; exit 2 ;;
 esac
