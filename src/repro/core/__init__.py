@@ -20,3 +20,6 @@ from .mapping import (MatrixReq, Tile, Plan, PackedPlan, TileSchedule,
                       ir_drop_max_cols, multicore_mvm, multicore_mvm_packed,
                       interleave_assignment)  # noqa: F401
 from .energy import mvm_cost, neurram_edp, PRIOR_ART_EDP, MVMCost  # noqa: F401
+from .verify import (ChipVerifyError, DEFAULT_VMEM_BUDGET, check_directions,
+                     check_packed, check_plan, check_schedule, verify_chip,
+                     verify_deployed)  # noqa: F401

@@ -26,6 +26,13 @@ artifact (see DESIGN.md 'Chip-compiler pipeline'):
 serving artifact: `CIMEngine` wraps one for interactive use, and
 `models/nn.deploy_packed_stack` stacks the layers of one across a scanned
 transformer stack (one chip per transformer layer, one engine per TP shard).
+The pipeline's cross-stage invariants (schedule a permutation of the plan,
+packed index maps in bounds, fused runs consecutive, transpose packs
+sharing the forward conductance stack) are NOT assumed to hold by
+construction: `compile_chip(verify="strict")` — the default — runs the
+chip-IR verifier (`core.verify.verify_chip`) over every emitted artifact
+and raises a structured `ChipVerifyError` naming the stage, tile and
+violated invariant before anything reaches a dispatch.
 
 BIDIRECTIONAL execution (paper Fig. 4e-g; the TNSA runs MVMs SL->BL and
 BL->SL over one programmed array): `compile_chip(...,
@@ -61,6 +68,7 @@ from .writeverify import iterative_program
 from .mapping import (MatrixReq, Plan, PackedPlan, TileSchedule,
                       ir_drop_max_cols, pack_tiles, pack_tiles_transposed,
                       plan_layers, schedule_tiles)
+from .verify import ChipVerifyError, verify_chip
 from ..kernels.cim_mvm.ops import cim_mvm, cim_mvm_packed
 from ..kernels.cim_mvm.ref import cim_mvm_ref, dequantize_output
 
@@ -442,8 +450,8 @@ def compile_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig,
                  x_cal: Optional[Dict[str, jax.Array]] = None,
                  directions: Sequence[str] = ("fwd",),
                  in_alpha_bwd: Union[float, Dict[str, float]] = 1.0,
-                 x_cal_bwd: Optional[Dict[str, jax.Array]] = None
-                 ) -> CompiledChip:
+                 x_cal_bwd: Optional[Dict[str, jax.Array]] = None,
+                 verify: str = "strict") -> CompiledChip:
     """Run the full pipeline: plan -> schedule -> program -> calibrate ->
     pack one chip's worth of weight matrices into a servable CompiledChip.
 
@@ -461,7 +469,16 @@ def compile_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig,
     shared gd_tiles stacks stay single-copy. in_alpha_bwd / x_cal_bwd are
     the transpose direction's input clip and (B_cal, C) calibration
     activations (synthetic fallback matched to the clip, like forward).
+    verify: "strict" (default) runs the chip-IR verifier
+    (`core.verify.verify_chip`) over every stage artifact before the chip
+    is returned — a violated invariant raises `ChipVerifyError` naming
+    stage, layer, tile and invariant instead of dispatching a corrupt
+    layout. "off" skips verification (a caller that just verified, or a
+    deliberately degenerate test artifact).
     """
+    if verify not in ("strict", "off"):
+        raise ValueError(f"verify must be 'strict' or 'off', got "
+                         f"{verify!r}")
     if _oracle_only(cfg):
         raise ValueError(
             "compile_chip serves the fused kernel path only; per-phase "
@@ -509,9 +526,12 @@ def compile_chip(key, weights: Dict[str, jax.Array], cfg: CIMConfig,
         bwd_packed = pack_chip(layers, plan, schedules, cfg, v_decrs_bwd,
                                direction="bwd", packed=packed,
                                in_alpha=in_alpha_bwd)
-    return CompiledChip(cfg=cfg, spec=spec, mode=mode, plan=plan,
+    chip = CompiledChip(cfg=cfg, spec=spec, mode=mode, plan=plan,
                         schedules=schedules, layers=packed,
                         bwd_layers=bwd_packed)
+    if verify == "strict":
+        verify_chip(chip)
+    return chip
 
 
 class CIMEngine:

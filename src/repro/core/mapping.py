@@ -33,8 +33,15 @@ and fifth stages live here:
     accumulate in-kernel; only a block genuinely revisited in a later
     pass falls back to a per-run partial the wrapper folds after the
     dispatch (`out_slot`/`out_col`). The stable within-pass sort keeps
-    every block's accumulation order identical to the pass-major order,
-    so fused and per-slot-partial execution stay bitwise-equal.
+    every block's accumulation order identical to the pass-major order —
+    the design intent is bitwise equality between fused and
+    per-slot-partial execution, and the layout invariants that intent
+    rests on (runs genuinely consecutive, every output block covered
+    exactly once, index maps in bounds) are not taken on faith: the
+    chip-IR verifier (`core.verify.check_packed`, run by
+    `compile_chip(verify="strict")` and at every deploy surface) checks
+    them statically on the emitted artifact, and the parity tests pin
+    the equality on the executed kernels.
   * `pack_tiles_transposed` (stage 5, transpose direction): the BL->SL
     view of the same plan for bidirectional workloads (paper Fig. 4e-g
     RBM Gibbs sampling). It REUSES the forward pack's gd_tiles stack —

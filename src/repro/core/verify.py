@@ -1,0 +1,478 @@
+"""Chip-IR verifier: static passes over every chip-compiler artifact.
+
+The five-stage compiler (plan -> schedule -> program -> calibrate -> pack,
+DESIGN.md 'Chip-compiler pipeline') emits layouts whose correctness the
+Pallas kernels ASSUME rather than check — and this repo's history shows
+those assumptions break silently: the PR-2 scheduled kernel shipped a
+layout that violated the Pallas-TPU consecutive-visit VMEM-liveness rule
+(caught only in review), `pack_tiles` once accepted a duplicated schedule
+index without error, and an unpinned `out_shardings` cost a pjit cache
+miss per serving step before a runtime trace counter exposed it. This
+module is the compiler's verifier tier: pure, NON-TRACED passes over each
+stage's artifact, run by default at the end of `core.cim.compile_chip`
+(`verify="strict"`) and standalone at deploy time
+(`verify_chip` / `verify_deployed` — models/nn deploys,
+launch/scheduler pool init, serve --cim).
+
+Every violation raises a structured `ChipVerifyError` naming the pipeline
+stage, the layer, the tile/slot and the invariant, so a corrupt artifact
+fails loudly BEFORE anything dispatches — the precondition for the
+multi-host and hardware-in-the-loop arcs, where a silently wrong layout
+becomes a cross-host or on-silicon bug.
+
+Invariants, by stage (the mutation tests in tests/test_verify.py corrupt
+each one and assert it is caught by name):
+
+  schedule  permutation            non-idle slots cover the tile sequence
+                                   exactly once (no duplicate / dropped
+                                   tile — the historical pack_tiles bug)
+            pass-shape             order length == n_passes * pass_len
+            core-double-booking    no core fires twice within one pass
+                                   (the chip time-shares merged cores)
+  plan      core-bounds            every tile sits on a real core
+            tile-extent            tiles fit the physical core array
+            ir-drop-cols           per-core column counts respect
+                                   `mapping.ir_drop_max_cols` (droop stays
+                                   within calibration tolerance)
+  pack      geometry / stack-shape index-map lengths and stacked tensor
+                                   trailing dims agree with the plan
+            tile-slot-permutation  the grid reaches every stack entry
+                                   exactly once
+            index-bounds           row/col/out index maps in range;
+                                   seq_slot is pass-major
+            block-coverage         non-idle slots cover the layer's
+                                   (row, col) output-block grid exactly
+                                   once
+            fused-runs             out_slot is monotone with unit steps and
+                                   runs are maximal — the STATIC statement
+                                   of the Pallas TPU consecutive-visit
+                                   VMEM-liveness precondition (a run whose
+                                   grid visits are not consecutive would
+                                   silently re-initialize its VMEM block:
+                                   the PR-2 bug class)
+            run-block              each run's out_col agrees with its
+                                   slots' output block
+            vmem-budget            estimated per-grid-step VMEM footprint
+                                   (bm x block shapes x dtype) fits the
+                                   configurable budget (~16 MB/core on TPU)
+  chip      direction-keys         fwd/bwd children agree name-for-name
+            shared-stack           the transpose pack reuses the forward
+                                   gd_tiles stack BY OBJECT IDENTITY (one
+                                   programmed conductance set — a copy
+                                   would double chip memory and let the
+                                   directions drift apart)
+            direction-agreement    fwd/bwd packs agree slot-for-slot
+                                   (swapped block maps gathered through
+                                   tile_slot, same pass structure)
+            schedule-pack          the packed pass structure matches the
+                                   stage-2 schedule
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+from .mapping import (PackedPlan, Plan, Tile, TileSchedule,
+                      ir_drop_max_cols)
+from .types import CIMConfig, CoreSpec
+
+# Per-core VMEM on current TPUs is ~16 MB; one grid step of the packed
+# kernels keeps the x block (bm, bk), one gd tile (bk, bn), the norm and
+# denorm rows (2, bn) and the output run block (bm, bn) live at once.
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+# ops.packed_call's worst-case batch block when the autotuner has not
+# measured the shape (autotune._DEFAULT_BM).
+_DEFAULT_BM = 256
+
+
+class ChipVerifyError(ValueError):
+    """A chip-compiler artifact violated a static invariant.
+
+    Structured: `stage` (schedule / plan / pack / chip), `invariant` (the
+    table in the module docstring), `layer` and `tile`/slot index when one
+    is implicated. The message embeds all of them so a bare str(err) in a
+    deploy log is actionable.
+    """
+
+    def __init__(self, stage: str, invariant: str, message: str, *,
+                 layer: Optional[str] = None, tile: Optional[int] = None):
+        self.stage = stage
+        self.invariant = invariant
+        self.layer = layer
+        self.tile = tile
+        where = f" layer={layer!r}" if layer is not None else ""
+        where += f" tile={tile}" if tile is not None else ""
+        super().__init__(
+            f"[stage:{stage}]{where} invariant={invariant}: {message}")
+
+
+# ------------------------------------------------------- stage 2: schedule
+
+def check_schedule(tiles: Sequence[Tile], schedule: TileSchedule, *,
+                   layer: Optional[str] = None) -> None:
+    """Verify a stage-2 TileSchedule against its tile sequence."""
+    tiles = [t for t in tiles if t.replica == 0]
+    if len(schedule.order) != schedule.n_passes * schedule.pass_len:
+        raise ChipVerifyError(
+            "schedule", "pass-shape",
+            f"order has {len(schedule.order)} slots but n_passes="
+            f"{schedule.n_passes} * pass_len={schedule.pass_len} = "
+            f"{schedule.n_passes * schedule.pass_len}", layer=layer)
+    covered = sorted(i for i in schedule.order if i is not None)
+    if covered != list(range(len(tiles))):
+        dup = sorted({i for i in covered if covered.count(i) > 1})
+        miss = sorted(set(range(len(tiles))) - set(covered))
+        raise ChipVerifyError(
+            "schedule", "permutation",
+            f"non-idle slots must cover the {len(tiles)}-tile sequence "
+            f"exactly once (duplicated: {dup}, missing: {miss}, "
+            f"out-of-range: {sorted(set(covered) - set(range(len(tiles))))})",
+            layer=layer)
+    for p in range(schedule.n_passes):
+        seen = {}
+        for s in range(p * schedule.pass_len, (p + 1) * schedule.pass_len):
+            i = schedule.order[s]
+            if i is None:
+                continue
+            core = tiles[i].core
+            if core in seen:
+                raise ChipVerifyError(
+                    "schedule", "core-double-booking",
+                    f"core {core} fires twice in pass {p} (tiles "
+                    f"{seen[core]} and {i}) — a merged core's occupants "
+                    "must be time-shared across passes", layer=layer,
+                    tile=i)
+            seen[core] = i
+
+
+# ----------------------------------------------------------- stage 1: plan
+
+def check_plan(plan: Plan, cfg: CIMConfig, spec: CoreSpec, *,
+               droop_tol: float = 0.05) -> None:
+    """Verify a stage-1 Plan against the physical core array and the
+    IR-drop planning constraint (`mapping.ir_drop_max_cols`)."""
+    max_cols = ir_drop_max_cols(cfg, spec, droop_tol)
+    row_cap = spec.rows // 2
+    for i, t in enumerate(plan.tiles):
+        if not 0 <= t.core < spec.n_cores:
+            raise ChipVerifyError(
+                "plan", "core-bounds",
+                f"tile on core {t.core} outside the chip's "
+                f"{spec.n_cores} cores", layer=t.layer, tile=i)
+        if t.rows > row_cap or t.cols > spec.cols:
+            raise ChipVerifyError(
+                "plan", "tile-extent",
+                f"tile is {t.rows}x{t.cols} weight cells but a core holds "
+                f"at most {row_cap}x{spec.cols} (differential rows halve "
+                "the height)", layer=t.layer, tile=i)
+        if max_cols is not None and t.cols > max_cols:
+            raise ChipVerifyError(
+                "plan", "ir-drop-cols",
+                f"tile spans {t.cols} columns but ir_drop_alpha="
+                f"{cfg.nonideal.ir_drop_alpha} bounds a core to "
+                f"{max_cols} (droop tolerance {droop_tol})",
+                layer=t.layer, tile=i)
+
+
+# ----------------------------------------------------------- stage 5: pack
+
+def _trailing(shape, n):
+    return tuple(int(d) for d in shape[-n:])
+
+
+def check_packed(packed: PackedPlan, *, bm: Optional[int] = None,
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                 layer: Optional[str] = None) -> None:
+    """Verify a stage-5 PackedPlan's static index maps and tensor shapes.
+
+    Works on deployed STACKED plans too (arrays carrying extra leading
+    layer/shard dims — deploy_packed_stack / ShardedPackedLayer): only
+    trailing dims are checked, and every index-map invariant lives in the
+    static aux geometry shared by the whole stack.
+
+    bm: batch block rows the VMEM estimate assumes; None takes the
+    autotuner's worst-case default (256). The autotuner calls this per
+    candidate before measuring, so a tuned winner can never violate the
+    budget (`kernels/cim_mvm/autotune.tune`).
+    """
+    name = layer if layer is not None else packed.layer
+    T = packed.n_tiles
+
+    # geometry: every static map is per-slot and pass-major
+    for field in ("col_block", "seq_slot", "tile_slot", "out_slot"):
+        if len(getattr(packed, field)) != T:
+            raise ChipVerifyError(
+                "pack", "geometry",
+                f"{field} has {len(getattr(packed, field))} entries for "
+                f"{T} slots", layer=name)
+    if packed.n_passes < 1 or T % packed.n_passes:
+        raise ChipVerifyError(
+            "pack", "geometry",
+            f"{T} slots do not divide into {packed.n_passes} passes",
+            layer=name)
+    if packed.bk < 1 or packed.bn < 1 or packed.n_rows < 1 \
+            or packed.n_cols < 1:
+        raise ChipVerifyError(
+            "pack", "geometry",
+            f"degenerate block geometry bk={packed.bk} bn={packed.bn} "
+            f"n_rows={packed.n_rows} n_cols={packed.n_cols}", layer=name)
+
+    # stacked tensor trailing dims (leading stack dims tolerated)
+    gd_shape = ((T, packed.bn, packed.bk) if packed.transpose
+                else (T, packed.bk, packed.bn))
+    if _trailing(packed.gd_tiles.shape, 3) != gd_shape:
+        raise ChipVerifyError(
+            "pack", "stack-shape",
+            f"gd_tiles trailing dims {_trailing(packed.gd_tiles.shape, 3)} "
+            f"!= {gd_shape}"
+            + (" (transpose plans index the forward-orientation stack)"
+               if packed.transpose else ""), layer=name)
+    for fname, arr in (("inv_norm_tiles", packed.inv_norm_tiles),
+                       ("denorm_tiles", packed.denorm_tiles)):
+        if _trailing(arr.shape, 3) != (T, 1, packed.bn):
+            raise ChipVerifyError(
+                "pack", "stack-shape",
+                f"{fname} trailing dims {_trailing(arr.shape, 3)} != "
+                f"{(T, 1, packed.bn)}", layer=name)
+    if _trailing(packed.v_decr_tiles.shape, 1) != (T,):
+        raise ChipVerifyError(
+            "pack", "stack-shape",
+            f"v_decr_tiles trailing dim "
+            f"{_trailing(packed.v_decr_tiles.shape, 1)} != {(T,)}",
+            layer=name)
+
+    # the grid must reach every stack entry exactly once
+    if sorted(packed.tile_slot) != list(range(T)):
+        raise ChipVerifyError(
+            "pack", "tile-slot-permutation",
+            f"tile_slot {packed.tile_slot} is not a permutation of "
+            f"range({T}) — some stack entries would be dispatched twice "
+            "and others never", layer=name)
+
+    n_rb = max(1, math.ceil(packed.n_rows / packed.bk))
+    n_cb = max(1, math.ceil(packed.n_cols / packed.bn))
+    pass_len = packed.pass_len
+    n_runs = len(packed.out_col)
+    for i in range(T):
+        if not 0 <= packed.row_block[i] < n_rb:
+            raise ChipVerifyError(
+                "pack", "index-bounds",
+                f"row_block[{i}]={packed.row_block[i]} outside the "
+                f"{n_rb} input blocks of n_rows={packed.n_rows} at "
+                f"bk={packed.bk}", layer=name, tile=i)
+        if not 0 <= packed.col_block[i] < n_cb:
+            raise ChipVerifyError(
+                "pack", "index-bounds",
+                f"col_block[{i}]={packed.col_block[i]} outside the "
+                f"{n_cb} output blocks of n_cols={packed.n_cols} at "
+                f"bn={packed.bn}", layer=name, tile=i)
+        if packed.seq_slot[i] != i // pass_len:
+            raise ChipVerifyError(
+                "pack", "index-bounds",
+                f"seq_slot[{i}]={packed.seq_slot[i]} breaks the "
+                f"pass-major layout (expected {i // pass_len} at "
+                f"pass_len={pass_len})", layer=name, tile=i)
+        if not 0 <= packed.out_slot[i] < n_runs:
+            raise ChipVerifyError(
+                "pack", "index-bounds",
+                f"out_slot[{i}]={packed.out_slot[i]} outside the "
+                f"{n_runs} runs of out_col", layer=name, tile=i)
+    for r, blk in enumerate(packed.out_col):
+        if not -1 <= blk < n_cb:
+            raise ChipVerifyError(
+                "pack", "index-bounds",
+                f"out_col[{r}]={blk} outside the {n_cb} output blocks "
+                "(-1 marks an all-idle run)", layer=name)
+
+    # fused runs: the STATIC statement of the Pallas TPU liveness rule —
+    # an output block's VMEM only survives CONSECUTIVE grid visits, so a
+    # run's slots must be a contiguous grid stretch. A non-monotone or
+    # skipping out_slot means some visit would re-initialize a live
+    # accumulator (the PR-2 silent-wrong-answer class).
+    if T:
+        if packed.out_slot[0] != 0:
+            raise ChipVerifyError(
+                "pack", "fused-runs",
+                f"out_slot starts at {packed.out_slot[0]}, not run 0",
+                layer=name, tile=0)
+        for i in range(1, T):
+            step = packed.out_slot[i] - packed.out_slot[i - 1]
+            if step not in (0, 1):
+                raise ChipVerifyError(
+                    "pack", "fused-runs",
+                    f"out_slot[{i - 1}..{i}] = "
+                    f"({packed.out_slot[i - 1]}, {packed.out_slot[i]}): "
+                    "runs must be maximal stretches of CONSECUTIVE grid "
+                    "visits — Pallas TPU only keeps an output block's "
+                    "VMEM alive across consecutive visits, so this "
+                    "layout would silently re-initialize a live "
+                    "accumulator", layer=name, tile=i)
+        if packed.out_slot[-1] != n_runs - 1:
+            raise ChipVerifyError(
+                "pack", "fused-runs",
+                f"out_slot ends at run {packed.out_slot[-1]} but out_col "
+                f"declares {n_runs} runs", layer=name, tile=T - 1)
+        for r in range(1, n_runs):
+            if packed.out_col[r] == packed.out_col[r - 1]:
+                raise ChipVerifyError(
+                    "pack", "fused-runs",
+                    f"adjacent runs {r - 1} and {r} share output block "
+                    f"{packed.out_col[r]} — a maximal run would have "
+                    "fused them (split runs forfeit the in-VMEM "
+                    "accumulation the fused layout exists for)",
+                    layer=name)
+
+    # run/block agreement + exact-once output-block coverage. Idle slots
+    # are statically identifiable: only they live in out_col == -1 runs.
+    seen = {}
+    for i in range(T):
+        run_blk = packed.out_col[packed.out_slot[i]]
+        if run_blk == -1:
+            continue                        # idle slot (pass padding)
+        if run_blk != packed.col_block[i]:
+            raise ChipVerifyError(
+                "pack", "run-block",
+                f"slot {i} sits in run {packed.out_slot[i]} of output "
+                f"block {run_blk} but its col_block is "
+                f"{packed.col_block[i]}", layer=name, tile=i)
+        blk = (packed.row_block[i], packed.col_block[i])
+        if blk in seen:
+            raise ChipVerifyError(
+                "pack", "block-coverage",
+                f"output block {blk} packed twice (slots {seen[blk]} and "
+                f"{i}) — its partial sum would be double-counted",
+                layer=name, tile=i)
+        seen[blk] = i
+    missing = [(r, c) for r in range(n_rb) for c in range(n_cb)
+               if (r, c) not in seen]
+    if missing:
+        raise ChipVerifyError(
+            "pack", "block-coverage",
+            f"no slot covers output block(s) {missing} of the "
+            f"{n_rb}x{n_cb} block grid — those outputs would be "
+            "silently zero", layer=name)
+
+    # per-grid-step VMEM footprint (see module constant)
+    bm_eff = _DEFAULT_BM if bm is None else max(int(bm), 1)
+    itemsize = getattr(getattr(packed.gd_tiles, "dtype", None),
+                       "itemsize", 4)
+    step_bytes = itemsize * (bm_eff * packed.bk      # x block
+                             + packed.bk * packed.bn  # gd tile
+                             + 2 * packed.bn          # norm + denorm rows
+                             + bm_eff * packed.bn)    # output run block
+    if step_bytes > vmem_budget:
+        raise ChipVerifyError(
+            "pack", "vmem-budget",
+            f"one grid step needs ~{step_bytes} bytes of VMEM at "
+            f"bm={bm_eff} (bk={packed.bk}, bn={packed.bn}, itemsize="
+            f"{itemsize}) but the budget is {vmem_budget}", layer=name)
+
+
+# --------------------------------------------------- chip-level invariants
+
+def check_directions(name: str, fwd: PackedPlan, bwd: PackedPlan) -> None:
+    """Verify a transpose-direction pack against its forward pack: shared
+    conductance stack BY IDENTITY, swapped geometry, slot-for-slot
+    agreement through the cross-direction tile_slot permutation."""
+    if bwd.gd_tiles is not fwd.gd_tiles:
+        raise ChipVerifyError(
+            "chip", "shared-stack",
+            "transpose pack carries its own gd_tiles stack instead of "
+            "referencing the forward stack — one programmed conductance "
+            "set must serve both directions (a copy doubles chip memory "
+            "and lets the directions drift apart)", layer=name)
+    if not bwd.transpose or fwd.transpose:
+        raise ChipVerifyError(
+            "chip", "direction-agreement",
+            f"direction flags wrong (fwd.transpose={fwd.transpose}, "
+            f"bwd.transpose={bwd.transpose})", layer=name)
+    if (bwd.bk, bwd.bn) != (fwd.bn, fwd.bk) \
+            or (bwd.n_rows, bwd.n_cols) != (fwd.n_cols, fwd.n_rows):
+        raise ChipVerifyError(
+            "chip", "direction-agreement",
+            f"transpose geometry not the forward swap: bwd "
+            f"{(bwd.bk, bwd.bn, bwd.n_rows, bwd.n_cols)} vs fwd "
+            f"{(fwd.bk, fwd.bn, fwd.n_rows, fwd.n_cols)}", layer=name)
+    if bwd.n_passes != fwd.n_passes or bwd.seq_slot != fwd.seq_slot:
+        raise ChipVerifyError(
+            "chip", "direction-agreement",
+            "transpose pack's pass structure diverges from the forward "
+            f"pack ({bwd.n_passes} vs {fwd.n_passes} passes)", layer=name)
+    want_row = tuple(fwd.col_block[g] for g in bwd.tile_slot)
+    want_col = tuple(fwd.row_block[g] for g in bwd.tile_slot)
+    if bwd.row_block != want_row or bwd.col_block != want_col:
+        raise ChipVerifyError(
+            "chip", "direction-agreement",
+            "transpose block maps are not the forward maps gathered "
+            "through tile_slot (slot-for-slot agreement broken): "
+            f"row_block {bwd.row_block} vs {want_row}, col_block "
+            f"{bwd.col_block} vs {want_col}", layer=name)
+
+
+def verify_chip(chip, *, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                bm: Optional[int] = None):
+    """Run every verifier pass over a CompiledChip. Returns the chip (so
+    deploy code can verify-and-use in one expression); raises
+    ChipVerifyError on the first violated invariant.
+
+    Called by `core.cim.compile_chip(verify="strict")` — the default — and
+    standalone by the deploy surfaces (models/nn.deploy_*_cim,
+    launch/scheduler pool init, serve --cim).
+    """
+    check_plan(chip.plan, chip.cfg, chip.spec)
+    for name, sched in chip.schedules.items():
+        check_schedule(chip.plan.tiles_for(name), sched, layer=name)
+    for name, pcl in chip.layers.items():
+        check_packed(pcl.packed, bm=bm, vmem_budget=vmem_budget, layer=name)
+        sched = chip.schedules.get(name)
+        if sched is not None and (
+                pcl.packed.n_passes != sched.n_passes
+                or pcl.packed.n_tiles != sched.n_passes * sched.pass_len):
+            raise ChipVerifyError(
+                "chip", "schedule-pack",
+                f"packed pass structure ({pcl.packed.n_passes} passes x "
+                f"{pcl.packed.pass_len}) disagrees with the stage-2 "
+                f"schedule ({sched.n_passes} x {sched.pass_len})",
+                layer=name)
+    if chip.bwd_layers:
+        if set(chip.bwd_layers) != set(chip.layers):
+            raise ChipVerifyError(
+                "chip", "direction-keys",
+                f"bwd layer names {sorted(chip.bwd_layers)} != fwd names "
+                f"{sorted(chip.layers)}")
+        for name, pcl in chip.bwd_layers.items():
+            check_packed(pcl.packed, bm=bm, vmem_budget=vmem_budget,
+                         layer=name)
+            check_directions(name, chip.layers[name].packed, pcl.packed)
+    return chip
+
+
+def verify_deployed(tree, *, vmem_budget: int = DEFAULT_VMEM_BUDGET):
+    """Verify every chip artifact reachable in a deployed params/pool tree.
+
+    Deploy surfaces stack per-layer packs over (L, n_shards) leading dims
+    (models/nn.deploy_packed_stack / ShardedPackedLayer) — the static plan
+    geometry is shared by the whole stack, so `check_packed` runs once per
+    stacked plan on trailing dims. Embedded CompiledChips (models/rbm
+    .ChipRBM) get the full `verify_chip`. Returns the tree unchanged, and
+    the number of artifacts checked as a sanity handle is available via
+    the return of `count_artifacts` if a caller wants it; violations raise
+    ChipVerifyError.
+    """
+    import jax
+
+    def is_chip(x):
+        return hasattr(x, "bwd_layers") and hasattr(x, "schedules")
+
+    chips, plans = [], []
+    for leaf in jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda x: is_chip(x) or isinstance(x, PackedPlan)):
+        if is_chip(leaf):
+            chips.append(leaf)
+        elif isinstance(leaf, PackedPlan):
+            plans.append(leaf)
+    for chip in chips:
+        verify_chip(chip, vmem_budget=vmem_budget)
+    for packed in plans:
+        check_packed(packed, vmem_budget=vmem_budget)
+    return tree

@@ -63,14 +63,21 @@ def candidates(m: int) -> Tuple[int, ...]:
 
 
 def _best_of(fn: Callable[[], None], n: int = 3) -> float:
-    """Best-of-n wall-clock seconds; one untimed warm-up call compiles."""
-    fn()
-    best = float("inf")
-    for _ in range(n):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+    """Default timer: the shared serve-path best-of-n protocol
+    (`benchmarks/_timing.best_of` — microseconds, but `tune` only argmins,
+    so the unit is irrelevant). The inline fallback keeps the kernel
+    package importable without the benchmarks tree on PYTHONPATH."""
+    try:
+        from benchmarks._timing import best_of
+    except ImportError:
+        fn()                     # one untimed warm-up call compiles
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+    return best_of(fn, n=n)
 
 
 def tune(x, packed, *, activation: str, n_max: int, v_read: float, seed=0,
@@ -79,14 +86,23 @@ def tune(x, packed, *, activation: str, n_max: int, v_read: float, seed=0,
     """Measure every bm candidate for this (plan, batch, activation), cache
     and return the winner.
 
-    timer: fn(thunk) -> seconds; defaults to `_best_of`. Benchmarks inject
-    their shared timer so the sweep and the reported rows agree.
+    timer: fn(thunk) -> a comparable duration (only the argmin matters);
+    defaults to the shared `benchmarks/_timing.best_of` protocol so the
+    sweep and every reported benchmark row agree on one clock.
     refresh: re-measure even on a cache hit (a hit otherwise returns the
     cached winner with an empty timing dict).
-    Returns (winner_bm, {bm: seconds}).
+
+    Every candidate is statically verified (`core.verify.check_packed` at
+    that bm) BEFORE it is measured: a bm whose per-grid-step VMEM
+    footprint exceeds the budget is skipped, so the cache can never hold
+    a winner the verifier would reject at deploy time. A corrupt plan
+    (any non-budget invariant) fails the whole sweep immediately.
+
+    Returns (winner_bm, {bm: duration}).
     """
     import jax
 
+    from ...core.verify import ChipVerifyError, check_packed
     from .ops import packed_call     # late: ops imports this module
 
     key = plan_signature(packed, x.shape[0], activation)
@@ -94,12 +110,28 @@ def tune(x, packed, *, activation: str, n_max: int, v_read: float, seed=0,
         return _CACHE[key], {}
     timer = timer or _best_of
     timings: Dict[int, float] = {}
+    skipped: Dict[int, str] = {}
     for bm in candidates(x.shape[0]):
+        try:
+            check_packed(packed, bm=bm)
+        except ChipVerifyError as e:
+            if e.invariant != "vmem-budget":
+                raise                # corrupt plan: no bm can fix it
+            skipped[bm] = str(e)
+            continue
+
         def run(bm=bm):
             jax.block_until_ready(packed_call(
                 x, packed, activation=activation, n_max=n_max,
                 v_read=v_read, seed=seed, bm=bm, interpret=interpret))
         timings[bm] = timer(run)
+    if not timings:
+        raise ChipVerifyError(
+            "pack", "vmem-budget",
+            f"every bm candidate {sorted(skipped)} exceeds the VMEM "
+            f"budget for plan '{packed.layer}' (bk={packed.bk}, "
+            f"bn={packed.bn}): " + next(iter(skipped.values())),
+            layer=packed.layer)
     winner = min(timings, key=timings.get)
     _CACHE[key] = winner
     return winner, timings

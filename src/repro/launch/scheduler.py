@@ -146,7 +146,12 @@ class ContinuousBatchingEngine:
             # for expert capacity (see module docstring)
             cfg = cfg.replace(moe_dropless=True)
         self.cfg = cfg
-        self.params = params
+        # last gate before the pool jits close over the chip stacks: a
+        # corrupt packed artifact (anything mutated between deploy and
+        # engine init) fails HERE with a named invariant, not as a silent
+        # wrong answer inside a dispatched kernel
+        from ..core.verify import verify_deployed
+        self.params = verify_deployed(params)
         self.n_slots = n_slots
         self.max_len = max_len
         self.chunk = chunk

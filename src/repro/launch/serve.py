@@ -160,9 +160,10 @@ def main(argv=None):
         mesh_shape = serving_mesh_shape() if mesh is None else None
         spec = CoreSpec(n_cores=args.cim_cores) if args.cim_cores else None
         t0 = time.time()
-        params = sv.deploy_cim(jax.random.PRNGKey(7), params,
-                               mode=args.cim_mode, mesh_shape=mesh_shape,
-                               spec=spec)
+        from ..core.verify import verify_deployed
+        params = verify_deployed(sv.deploy_cim(
+            jax.random.PRNGKey(7), params, mode=args.cim_mode,
+            mesh_shape=mesh_shape, spec=spec))
         tp = (dict(mesh.shape)["model"] if mesh is not None
               else mesh_shape.get("model", 1))
         n_packed = sum(1 for k in params["layers"] if k.endswith("_cim"))
@@ -191,8 +192,21 @@ def main(argv=None):
                                         cfg.d_model), cfg.dtype)
         memory = T._encode(params, src, cfg)
 
-    prefill = jax.jit(sv.prefill)
-    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    # On a mesh, pin the cache output to the canonical cache_pspecs
+    # NamedShardings (the scheduler pins pool_pspecs the same way):
+    # unpinned, GSPMD returns fresh sharding objects each call and the C++
+    # pjit call cache misses on every decode step.
+    ns = None
+    if mesh is not None:
+        from jax.sharding import NamedSharding
+        from ..distributed.sharding import cache_pspecs, fit_pspecs
+        ns = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            fit_pspecs(cache, cache_pspecs(cache, data_axes=("data",)),
+                       mesh))
+    pin = {"out_shardings": (None, ns)} if ns is not None else {}
+    prefill = jax.jit(sv.prefill, **pin)
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,), **pin)
 
     # timed_call (benchmarks/_timing): block_until_ready around the step.
     # The first prefill/decode dispatch carries compile time, so per-token

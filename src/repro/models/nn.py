@@ -28,6 +28,7 @@ from ..core.types import CIMConfig, CoreSpec, NonIdealityConfig
 from ..core.quant import pact_quantize
 from ..core.noise import weight_noise
 from ..core import cim as cim_api
+from ..core.verify import verify_deployed
 
 
 # ---------------------------------------------------------------- init utils
@@ -284,11 +285,14 @@ def sharded_packed_forward(spl: ShardedPackedLayer, x, ccfg: CIMConfig, *,
     row_reduce picks how the row-parallel psum lowers:
       * 'ordered' (default): all_gather + the shared `_ordered_fold`
         (left-fold add in shard order over materialized partials) —
-        bitwise-equal to `sharded_packed_loop` by construction, because
-        `lax.psum`'s reduction order is backend-defined and drifts by
-        1 ulp on split plans (the folded denorm makes shard partials
-        non-integer floats, so addition order matters; the parity tests
-        pin this contract).
+        bitwise-equal to `sharded_packed_loop`: both sides reduce in
+        the same deterministic shard order, whereas `lax.psum`'s
+        reduction order is backend-defined and drifts by 1 ulp on
+        split plans (the folded denorm makes shard partials
+        non-integer floats, so addition order matters). The parity
+        tests pin this contract at runtime, and the chip-IR verifier
+        (`core.verify`, run by every deploy_*_cim path) statically
+        checks the packed-layout invariants the equality rests on.
       * 'psum': `lax.psum` — fewer bytes on real interconnects (a ring
         all-reduce moves ~2x the output instead of n_shards x); use it
         when 1-ulp nondeterminism vs the single-device oracle is
@@ -623,7 +627,10 @@ def deploy_transformer_cim(key, params, arch_cfg, *, mode: str = "ideal",
 
     out = dict(params)
     out["layers"] = new_layers
-    return out
+    # compile_chip verified each per-layer chip; this pass re-checks the
+    # STACKED artifacts (trailing-dim shapes + shared static geometry)
+    # after the tree_map(stack) / device placement surgery above
+    return verify_deployed(out)
 
 
 def is_recurrent_arch(arch_cfg) -> bool:
@@ -727,7 +734,9 @@ def deploy_recurrent_cim(key, params, arch_cfg, *, mode: str = "ideal",
                                          shard_axis=0)
             new_sa[n + "_cim"] = spl
         out["shared_attn"] = new_sa
-    return out
+    # re-verify the stacked artifacts post-stack/strip/placement (the
+    # per-chip compiles were already strict-verified)
+    return verify_deployed(out)
 
 
 def deploy_rbm_cim(key, params, ccfg: CIMConfig, v_cal, *,
@@ -807,5 +816,6 @@ def deploy_rbm_cim(key, params, ccfg: CIMConfig, v_cal, *,
         key, {"rbm": w_dep.astype(jnp.float32)}, ccfg, spec, mode,
         plan=plan, in_alpha=1.0, x_cal={"rbm": xv},
         directions=("fwd", "bwd"), in_alpha_bwd=1.0, x_cal_bwd={"rbm": xh})
-    return rbm.ChipRBM(chip=chip, perm=perm, inv_perm=inv_perm,
-                       n_vis=n_vis, n_hid=n_hid, n_pad=n_pad)
+    return verify_deployed(rbm.ChipRBM(
+        chip=chip, perm=perm, inv_perm=inv_perm,
+        n_vis=n_vis, n_hid=n_hid, n_pad=n_pad))

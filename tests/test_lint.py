@@ -1,0 +1,179 @@
+"""tools/lint.py: rule-by-rule checks on inline snippets, fixture
+expectations, and the repo-lands-clean contract that CI enforces."""
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import lint  # noqa: E402
+
+
+def rules_of(src: str, *, is_test: bool = False):
+    src = textwrap.dedent(src)
+    linter = lint.ModuleLinter(Path("snippet.py"), src, is_test=is_test)
+    return sorted({v.rule for v in linter.run()})
+
+
+def test_r001_flags_unpinned_and_accepts_pinned():
+    bad = """
+        import jax
+        def build(cfg, ns):
+            mesh = jax.make_mesh((1, 8), ("data", "model"))
+            return jax.jit(lambda p, c: c, donate_argnums=(1,))
+    """
+    assert rules_of(bad) == ["R001"]
+    good = bad.replace("donate_argnums=(1,))",
+                       "donate_argnums=(1,), out_shardings=(None, ns))")
+    assert rules_of(good) == []
+    # the conditional-dict idiom (scheduler.py) counts as pinned
+    idiom = """
+        import jax
+        def build(cfg, ns):
+            mesh = jax.make_mesh((1, 8), ("data", "model"))
+            return jax.jit(
+                lambda p, c: c,
+                **({"out_shardings": (None, ns)} if ns is not None else {}))
+    """
+    assert rules_of(idiom) == []
+
+
+def test_r001_requires_mesh_in_scope():
+    no_mesh = """
+        import jax
+        def build(cfg):
+            return jax.jit(lambda p, c: c, donate_argnums=(1,))
+    """
+    assert rules_of(no_mesh) == []
+
+
+def test_r001_skipped_in_tests():
+    bad = """
+        import jax
+        def test_parity(mesh):
+            f = jax.jit(lambda c: c)
+    """
+    assert rules_of(bad, is_test=True) == []
+    assert rules_of(bad) == ["R001"]
+
+
+def test_r002_use_after_donate_and_rebind_ok():
+    bad = """
+        import jax
+        def serve(params, cache, step):
+            decode = jax.jit(step, donate_argnums=(1,))
+            out, new = decode(params, cache)
+            return cache
+    """
+    assert rules_of(bad) == ["R002"]
+    rebind = bad.replace("out, new = decode(params, cache)",
+                         "out, cache = decode(params, cache)") \
+                .replace("return cache", "return out")
+    assert rules_of(rebind) == []
+
+
+def test_r003_np_and_tracer_if_with_exemptions():
+    bad = """
+        import jax
+        import numpy as np
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return np.tanh(x)
+            return x
+    """
+    assert rules_of(bad) == ["R003"]
+    clean = """
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n, y=None):
+            if n > 2:                 # static: host-decidable
+                x = x * n
+            if y is None:
+                y = x
+            if isinstance(x, dict):
+                x = x["a"]
+            if x.ndim == 2:
+                x = x[None]
+            return x + y
+    """
+    assert rules_of(clean) == []
+
+
+def test_r004_typo_and_range():
+    assert rules_of("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("n_pases",))
+        def f(x, n_passes):
+            return x
+    """) == ["R004"]
+    assert rules_of("""
+        import jax
+        def f(x, y):
+            return x
+        g = jax.jit(f, static_argnums=(3,))
+    """) == ["R004"]
+
+
+def test_r005_eager_vs_jit_parity():
+    bad = """
+        import jax
+        import numpy as np
+        def fwd(x):
+            return x
+        def test_parity():
+            j = jax.jit(fwd)
+            assert np.array_equal(j(1), fwd(1))
+    """
+    assert rules_of(bad, is_test=True) == ["R005"]
+    # jit-vs-jit (two jits of the same fn) is the blessed pattern
+    good = """
+        import jax
+        import numpy as np
+        def fwd(x):
+            return x
+        def test_parity():
+            j = jax.jit(fwd)
+            k = jax.jit(fwd)
+            assert np.array_equal(j(1), k(1))
+    """
+    assert rules_of(good, is_test=True) == []
+
+
+def test_disable_comment_suppresses():
+    src = """
+        import jax
+        def build(cfg):
+            mesh = jax.make_mesh((1, 8), ("data", "model"))
+            return jax.jit(lambda c: c)  # lint: disable=R001
+    """
+    assert rules_of(src) == []
+
+
+def test_fixtures_declare_their_findings():
+    """Every fixture's `# lint-expect:` header matches what the linter
+    reports — the same contract `tools/lint.py --self-test` enforces."""
+    fixture_dir = REPO / "tools" / "lint_fixtures"
+    fixtures = sorted(fixture_dir.glob("*.py"))
+    assert len(fixtures) >= 7
+    seen = set()
+    for f in fixtures:
+        src = f.read_text()
+        expected = lint._fixture_expected(src)
+        got = {v.rule for v in lint.ModuleLinter(
+            f, src, is_test="test" in f.stem).run()}
+        assert got == expected, f.name
+        seen |= expected
+    # the historical bug classes all have a failing fixture
+    assert {"R001", "R002", "R003", "R004", "R005"} <= seen
+
+
+def test_repo_lands_clean():
+    """The rule ci.sh enforces: src/ and tests/ lint clean."""
+    violations = lint.lint_paths([str(REPO / "src"), str(REPO / "tests")])
+    assert violations == [], "\n".join(map(str, violations))

@@ -1,11 +1,23 @@
 #!/usr/bin/env bash
 # CI tiers for the NeuRRAM reproduction.
 #
-#   tools/ci.sh            fast tier: pytest -m "not slow" + bench-smoke
+#   tools/ci.sh            fast tier: lint + pytest -m "not slow" + bench-smoke
 #   tools/ci.sh full       tier-1:    the whole suite, slow tests included
 #   tools/ci.sh bench      bench-smoke only (writes BENCH_mapping.json)
+#   tools/ci.sh lint       static analysis only: the AST jit-hygiene lint
+#                          over src/ + tests/ plus the linter/verifier
+#                          self-test fixtures (tools/lint.py)
 #
-# The fast tier is the pre-commit loop: kernels, planner/scheduler/packing,
+# The fast tier is the pre-commit loop. It opens with the LINT tier —
+# static analysis is the cheapest signal and fails deterministically (no
+# timing flakiness exemption needed), so it runs before anything that
+# compiles a kernel: the AST lint (out_shardings pinning, donate reuse,
+# host ops under trace, static_argnames validity, jit-vs-jit parity in
+# tests) over src/ and tests/, then the self-test that checks the linter
+# against fixture snippets reproducing each historical bug and drives the
+# chip-IR verifier (core/verify.py) over known-bad packed layouts (the
+# PR-2 non-consecutive fused run, the duplicated schedule index).
+# Then the pytest sweep: kernels, planner/scheduler/packing,
 # engine, models, distributed — followed by a bench-smoke that runs
 # benchmarks/bench_mapping.py in quick mode and records the executor
 # timings to BENCH_mapping.json (the perf trajectory, including the
@@ -43,6 +55,12 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+lint_tier() {
+  echo "== lint: AST jit-hygiene rules + verifier self-check =="
+  python tools/lint.py src tests
+  python tools/lint.py --self-test
+}
 
 bench_smoke() {
   echo "== bench-smoke: mapping executors =="
@@ -108,6 +126,7 @@ serving_bench_smoke() {
 tier="${1:-fast}"
 case "$tier" in
   fast)
+    lint_tier
     python -m pytest -q -m "not slow"
     bench_smoke
     serve_smoke
@@ -121,5 +140,6 @@ case "$tier" in
     bench_smoke --enforce-timing
     serving_bench_smoke --enforce-timing
     ;;
-  *) echo "usage: tools/ci.sh [fast|full|bench]" >&2; exit 2 ;;
+  lint) lint_tier ;;
+  *) echo "usage: tools/ci.sh [fast|full|bench|lint]" >&2; exit 2 ;;
 esac

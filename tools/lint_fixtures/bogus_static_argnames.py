@@ -1,0 +1,19 @@
+# lint-expect: R004
+# A typo'd static_argnames entry: jax errors only lazily, so the real
+# argument silently stays traced and retraces on every distinct value.
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n_pases",))  # BUG: typo
+def run(x, n_passes):
+    return x * n_passes
+
+
+def build():
+    return jax.jit(kernel, static_argnums=(4,))  # BUG: out of range
+
+
+def kernel(x, gd, bm, bn):
+    return x

@@ -1,0 +1,36 @@
+# lint-expect: none
+# Idioms every rule must ACCEPT: the rebind-on-call donate pattern
+# (`pool = decode(params, pool)`), timed_call wrapping a donating jit with
+# the result rebound, host-decidable `if` tests inside traced functions
+# (isinstance / `is None` / static attributes like .ndim), and real
+# static_argnames.
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def serve(params, pool, steps):
+    decode = jax.jit(step, donate_argnums=(1,))
+    for _ in range(steps):
+        logits, pool = decode(params, pool)
+        pool, dt = timed_call(decode, params, pool)[0], 0.0
+    return logits
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def step(params, pool, interpret=None):
+    x = pool["x"]
+    if interpret is None:                       # static param: host-decidable
+        interpret = False
+    if isinstance(pool, dict):                  # host-decidable
+        x = x + 1
+    if x.ndim == 2:                             # .ndim is static at trace
+        x = x[None]
+    if params is not None:                      # `is` test never traces
+        x = x * jnp.float32(2.0)
+    return x, pool
+
+
+def timed_call(fn, *args):
+    return fn(*args), 0.0

@@ -1,0 +1,19 @@
+# lint-expect: R002
+# Use-after-donate: `cache` is donated to the decode jit and then read
+# again without being rebound — its buffer is dead after the call.
+import jax
+
+
+def serve(params, cache, batches):
+    decode = jax.jit(step, donate_argnums=(1,))
+    logits = []
+    for batch in batches:
+        out, new_cache = decode(params, cache, batch)
+        logits.append(out)
+        print(cache["k"].shape)         # BUG: donated buffer re-read
+        cache = new_cache
+    return logits
+
+
+def step(params, cache, batch):
+    return batch, cache

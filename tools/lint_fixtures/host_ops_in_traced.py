@@ -1,0 +1,30 @@
+# lint-expect: R003
+# Host ops inside traced functions: numpy silently constant-folds at trace
+# time, and a Python `if` on a tracer bakes in whichever branch the trace
+# took (or raises ConcretizationTypeError).
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_np(x):
+    return np.tanh(x) + jnp.ones_like(x)        # BUG: np under trace
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def bad_branch(x, scale):
+    if x > 0:                                   # BUG: `if` on tracer
+        return x * scale
+    return -x
+
+
+def caller(xs):
+    return jax.jit(helper)(xs)
+
+
+def helper(x):
+    y = 2.0 * x if x.sum() > 0 else x           # BUG: conditional on tracer
+    return y

@@ -1,0 +1,18 @@
+# lint-expect: R005
+# A bitwise-parity assertion comparing an eager call against a jit of the
+# SAME function: compiled numerics legitimately differ from eager numerics
+# (fusion, reassociation), so the gate must be jit-vs-jit.
+import jax
+import numpy as np
+
+
+def forward(x):
+    return x @ x.T
+
+
+def test_packed_parity():
+    x = np.ones((4, 4), np.float32)
+    fwd_jit = jax.jit(forward)
+    y_jit = fwd_jit(x)
+    y_eager = forward(x)                        # BUG: eager reference
+    assert np.array_equal(y_jit, y_eager)

@@ -1,0 +1,17 @@
+# lint-expect: R001
+# The PR-7 bug: an engine-path jit with a mesh in scope but no pinned
+# out_shardings. GSPMD returns fresh GSPMDSharding objects every call, so
+# the C++ pjit call cache misses on every serving step.
+import jax
+
+
+def build_engine(cfg, pool):
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))  # BUG
+    return mesh, decode
+
+
+def make_decode_step(cfg):
+    def step(params, pool):
+        return pool
+    return step
