@@ -6,10 +6,17 @@ AND injected into the kernel autotuner (repro.kernels.cim_mvm.autotune.tune)
 for its candidate sweep, so tuned winners and benchmark rows are directly
 comparable — a winner picked by one clock and a row reported by another
 would make the "tuning helped" claim unfalsifiable.
+
+`timed_call` — the serve-path per-token clock — is re-exported from its
+canonical home in repro.obs.clock, so the bench harnesses and the serving
+engine measure with the SAME implementation (lint rule R006 keeps rogue
+reimplementations off the serving path).
 """
 import time
 
 import jax
+
+from repro.obs.clock import timed_call  # noqa: F401  (canonical re-export)
 
 
 def best_of(fn, n=5):
@@ -23,16 +30,3 @@ def best_of(fn, n=5):
         jax.block_until_ready(fn())
         best = min(best, time.time() - t0)
     return best * 1e6
-
-
-def timed_call(fn, *args):
-    """(result, seconds) for ONE dispatch, block_until_ready included —
-    the serve-path per-token clock (launch/scheduler + serve.py). Unlike
-    `best_of` the result is kept (serving steps mutate donated state, so
-    they cannot be re-run for a best-of loop) and compile time is NOT
-    excluded here — callers warm the jit first (scheduler.warmup / the
-    serve drivers' warmup step) and exclude the warmup from stats."""
-    t0 = time.perf_counter()
-    out = fn(*args)
-    jax.block_until_ready(out)
-    return out, time.perf_counter() - t0

@@ -42,6 +42,7 @@ from repro.data import traffic_requests
 from repro.launch.scheduler import (ContinuousBatchingEngine, Request,
                                     serve_static)
 from repro.launch.steps import arch_serving
+from repro.obs import MetricsRegistry
 
 
 def _requests(tr, n):
@@ -67,15 +68,23 @@ def run(arch="gemma2-9b", *, quick=False, cim=False, n_requests=None,
                           rate=rate, min_gen=2, max_gen=max_gen)
     max_len = max_prompt + max_gen
 
+    # both paths record into ONE shared registry (repro.obs) — the same
+    # families `serve --traffic --metrics-out` exports, so bench rows and
+    # serving telemetry come from identical instruments
+    metrics = MetricsRegistry()
     eng = ContinuousBatchingEngine(cfg, params, n_slots=slots,
-                                   max_len=max_len, chunk=chunk)
+                                   max_len=max_len, chunk=chunk,
+                                   metrics=metrics)
     cont = eng.run(_requests(tr, n))
 
     # the static baseline serves the SAME stream; moe_dropless matches the
     # engine's forced setting so both paths run identical model math
     stat = serve_static(eng.cfg, params, _requests(tr, n), batch=slots,
-                        max_len=max_len)
+                        max_len=max_len, metrics=metrics)
 
+    # registry-derived quantiles (log-bucket interpolated) ride along so
+    # the bench rows can be cross-checked against a --metrics-out dump
+    h_tok = metrics.get("serve_token_lat_s")
     rows = [
         (f"continuous_{arch}", cont["p50_ms"] * 1e3, {
             "p50_ms": cont["p50_ms"], "p99_ms": cont["p99_ms"],
@@ -83,12 +92,26 @@ def run(arch="gemma2-9b", *, quick=False, cim=False, n_requests=None,
             "tok_per_s": cont["tok_per_s"], "tokens": cont["tokens"],
             "requests": cont["requests"], "wall_s": cont["wall_s"],
             "slots": slots, "chunk": chunk, "rate": rate,
-            "decode_traces": cont["decode_traces"]}),
+            "decode_traces": cont["decode_traces"],
+            "jit_traces_pool_decode": metrics.value(
+                "jit_traces", entry="pool_decode"),
+            "registry_p50_ms": h_tok.quantile(0.5) * 1e3,
+            "registry_tokens": int(
+                metrics.value("serve_tokens_generated")),
+            "mvm_dispatches": cont["mvm_dispatches"],
+            "energy_pj": cont["energy_pj"],
+            "pj_per_token": cont["pj_per_token"],
+            "tops_per_w": cont["tops_per_w"],
+            "utilization": cont["utilization"]}),
         (f"static_{arch}", stat["p50_ms"] * 1e3, {
             "p50_ms": stat["p50_ms"], "p99_ms": stat["p99_ms"],
             "tok_per_s": stat["tok_per_s"], "tokens": stat["tokens"],
             "requests": stat["requests"], "wall_s": stat["wall_s"],
-            "batch": slots}),
+            "batch": slots,
+            "mvm_dispatches": stat["mvm_dispatches"],
+            "energy_pj": stat["energy_pj"],
+            "pj_per_token": stat["pj_per_token"],
+            "utilization": stat["utilization"]}),
     ]
     return rows
 

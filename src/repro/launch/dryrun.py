@@ -13,7 +13,6 @@ Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 import argparse
 import json
 import re
-import time
 import traceback
 
 import jax
@@ -22,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import configs
 from ..models import transformer as T
+from ..obs.clock import stopwatch
 from ..distributed.sharding import (param_pspecs, batch_pspecs, cache_pspecs,
                                     opt_pspecs, fit_pspecs, zero_pspecs)
 from .roofline import model_flops
@@ -170,14 +170,15 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         accum = shape.global_batch // 16
 
     # A: full config, rolled — memory analysis
-    t0 = time.time()
-    if cfg.moe_impl == "ep":
-        from ..models import moe as moe_mod
-        moe_mod.MESH_FOR_EP = mesh
-    compiled_full = _compile_cell(cfg, shape, mesh, daxes, donate=donate,
-                                  fsdp=use_fsdp, accum=accum, kv_mode=kv_mode,
-                                  grad_sync=grad_sync)
-    t_compile = time.time() - t0
+    with stopwatch() as sw_compile:
+        if cfg.moe_impl == "ep":
+            from ..models import moe as moe_mod
+            moe_mod.MESH_FOR_EP = mesh
+        compiled_full = _compile_cell(cfg, shape, mesh, daxes,
+                                      donate=donate, fsdp=use_fsdp,
+                                      accum=accum, kv_mode=kv_mode,
+                                      grad_sync=grad_sync)
+    t_compile = sw_compile.s
     mem = compiled_full.memory_analysis()
 
     if multi_pod:

@@ -25,15 +25,16 @@ clamped reconstruction does not reduce L2 error by at least 50%.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
-from ..core.energy import mvm_cost
 from ..core.types import CIMConfig
 from ..data import binary_patterns, corrupt_flip, corrupt_occlude
 from ..models import nn, rbm
+from ..obs import MetricsRegistry
+from ..obs.chipmeter import ChipMeter
+from ..obs.clock import stopwatch, timed_call
 
 
 def _train_rbm(key, n_vis, n_hid, pixels, steps, data_size=512):
@@ -66,6 +67,9 @@ def main(argv=None):
                     help="pixel-interleaved multi-core mapping (Fig. 4f)")
     ap.add_argument("--stochastic", action="store_true",
                     help="sample h->v with the chip's stochastic neurons")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the per-direction chip meters (and run "
+                         "latency histograms) as JSON")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -76,25 +80,23 @@ def main(argv=None):
     cfg = CIMConfig(in_bits=args.in_bits, out_bits=args.out_bits)
 
     key = jax.random.PRNGKey(0)
-    t0 = time.time()
-    params, v_train = _train_rbm(key, n_vis, args.hidden, args.pixels,
-                                 args.train_steps)
-    t_train = time.time() - t0
+    with stopwatch() as sw_train:
+        params, v_train = _train_rbm(key, n_vis, args.hidden, args.pixels,
+                                     args.train_steps)
 
-    t0 = time.time()
-    crbm = nn.deploy_rbm_cim(jax.random.PRNGKey(3), params, cfg,
-                             v_train[:64], mode=args.mode,
-                             interleave=args.interleave)
+    with stopwatch() as sw_deploy:
+        crbm = nn.deploy_rbm_cim(jax.random.PRNGKey(3), params, cfg,
+                                 v_train[:64], mode=args.mode,
+                                 interleave=args.interleave)
     chip = crbm.chip
     fwd_plan = chip.layers["rbm"].packed
     bwd_plan = chip.bwd_layers["rbm"].packed
     assert bwd_plan.gd_tiles is fwd_plan.gd_tiles   # ONE programmed array
-    t_deploy = time.time() - t0
     print(f"recover: compiled 1 chip x 2 directions ({args.mode}"
           f"{', interleaved' if args.interleave else ''}): "
           f"{fwd_plan.n_tiles} tiles / {fwd_plan.n_passes} passes fwd, "
-          f"shared gd stack bwd, in {t_deploy:.1f}s "
-          f"(train {t_train:.1f}s)")
+          f"shared gd stack bwd, in {sw_deploy.s:.1f}s "
+          f"(train {sw_train.s:.1f}s)")
 
     vt = binary_patterns(jax.random.PRNGKey(7), args.batch, d=args.pixels,
                          rank=4)
@@ -110,10 +112,14 @@ def main(argv=None):
         stochastic=args.stochastic)
     traj = recover()                      # compile + run
     traj.block_until_ready()
-    t0 = time.time()
-    traj = recover()                      # steady-state serving latency
-    traj.block_until_ready()
-    t_serve = time.time() - t0
+    traj, t_serve = timed_call(recover)   # steady-state serving latency
+    # per-direction dispatch meters over the ONE timed Gibbs run: each
+    # cycle pushes the whole batch through the fwd (v->h, SL->BL) chip
+    # and back through the bwd (h->v, BL->SL) direction of the SAME
+    # programmed array
+    meter = ChipMeter.from_chip(chip, name="rbm")
+    meter.count_rows(args.batch * args.cycles, direction="fwd")
+    meter.count_rows(args.batch * args.cycles, direction="bwd")
 
     pix = args.pixels
     e0 = float(rbm.l2_error(v_c[:, :pix], vt[:, :pix]))
@@ -128,11 +134,11 @@ def main(argv=None):
     e1 = float(rbm.l2_error(rec[:, :pix], vt[:, :pix]))
     reduction = 1.0 - e1 / e0
 
-    # per-direction energy accounting (analytical model, Ext. Data Fig. 10)
-    fwd_cost = mvm_cost(crbm.n_pad, args.hidden + 1, args.in_bits,
-                        args.out_bits)
-    bwd_cost = mvm_cost(args.hidden + 1, crbm.n_pad, args.in_bits,
-                        args.out_bits)
+    # per-direction energy accounting (analytical model, Ext. Data
+    # Fig. 10) — read off the chip meters, which price each direction's
+    # ACTUAL packed plan geometry through core/energy.mvm_cost
+    fwd_cost = meter.entries[("rbm/rbm", "fwd")].cost
+    bwd_cost = meter.entries[("rbm/rbm", "bwd")].cost
     e_cycle = fwd_cost.energy_pj + bwd_cost.energy_pj
     print(f"energy/MVM: fwd (v->h, SL->BL) {fwd_cost.energy_pj:.0f} pJ "
           f"@ {fwd_cost.tops_per_w:.1f} TOPS/W | "
@@ -140,8 +146,16 @@ def main(argv=None):
           f"@ {bwd_cost.tops_per_w:.1f} TOPS/W")
     print(f"energy/request: {args.cycles * e_cycle / 1e3:.2f} nJ "
           f"({args.cycles} cycles); batch of {args.batch}: "
-          f"{args.batch * args.cycles * e_cycle / 1e6:.3f} uJ modeled, "
+          f"{meter.energy_pj() / 1e6:.3f} uJ modeled, "
           f"{t_serve * 1e3:.1f} ms wall")
+    if args.metrics_out:
+        metrics = MetricsRegistry()
+        meter.export(metrics)
+        metrics.histogram("recover_gibbs_run_s",
+                          "steady-state Gibbs recovery run seconds"
+                          ).observe(t_serve)
+        metrics.write_json(args.metrics_out)
+        print(f"metrics: wrote {args.metrics_out}")
     print(f"recover: batch={args.batch} cycles={args.cycles} "
           f"corrupt={args.corrupt}({args.frac}) "
           f"L2 {e0:.2f} -> {e1:.2f} ({100 * reduction:.0f}% reduction; "

@@ -56,17 +56,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import MetricsRegistry, TraceBuffer
+from ..obs.chipmeter import ChipMeter
+from ..obs.clock import now as clock_now
+from ..obs.clock import timed_call
+from ..obs.jitwatch import JitWatcher
+from ..obs.trace import ENGINE_PID, REQUEST_PID
 from .steps import (POOL_KEYS, arch_serving, make_pool_decode_step,
                     make_slot_prefill_step)
-
-try:  # canonical serve-path clock (benchmarks/_timing, satellite of ISSUE 7)
-    from benchmarks._timing import timed_call
-except ImportError:  # repro imported without the repo root on sys.path
-    def timed_call(fn, *args):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        return out, time.perf_counter() - t0
 
 
 def init_pool(cfg, n_slots: int, max_len: int, mesh=None):
@@ -119,6 +116,8 @@ class Request:
     token_lat: List[float] = dataclasses.field(default_factory=list)
     t_first: float = -1.0                # arrival -> first token (TTFT)
     t_done: float = -1.0
+    t_admit: float = -1.0                # seconds into the run at admission
+    energy_pj: float = 0.0               # attributed modeled chip energy
     logits: List[np.ndarray] = dataclasses.field(default_factory=list)
 
 
@@ -140,7 +139,10 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg, params, n_slots: int, max_len: int, *,
-                 chunk: int = 32, mesh=None, capture_logits: bool = False):
+                 chunk: int = 32, mesh=None, capture_logits: bool = False,
+                 metrics: Optional[MetricsRegistry] = None,
+                 trace: Optional[TraceBuffer] = None,
+                 strict_jit: bool = False):
         if cfg.n_experts > 0 and not cfg.moe_dropless:
             # engine-owned contract: co-batched requests must not compete
             # for expert capacity (see module docstring)
@@ -168,21 +170,66 @@ class ContinuousBatchingEngine:
             from ..distributed.sharding import pool_pspecs
             ns = jax.tree_util.tree_map(
                 lambda s: NamedSharding(mesh, s), pool_pspecs(self.pool))
-        self._decode = jax.jit(
-            make_pool_decode_step(cfg), donate_argnums=(1,),
+        # Every engine jit goes through the watchdog: trace counts become a
+        # metric on every run and, under strict_jit, a hard assertion. The
+        # wrapper forwards calls verbatim (same donation/shardings/static
+        # args), so compiled semantics — and the bitwise pool-vs-static
+        # contract — are untouched whether metrics are read or not.
+        self.jitwatch = JitWatcher(strict=strict_jit)
+        self._decode = self.jitwatch.wrap(
+            "pool_decode", make_pool_decode_step(cfg), max_traces=1,
+            donate_argnums=(1,),
             **({"out_shardings": (None, ns)} if ns is not None else {}))
-        self._prefill = jax.jit(
-            make_slot_prefill_step(cfg), donate_argnums=(1,),
+        self._prefill = self.jitwatch.wrap(
+            "slot_prefill", make_slot_prefill_step(cfg),
+            donate_argnums=(1,),
             **({"out_shardings": (None, ns)} if ns is not None else {}))
-        self._reset = jax.jit(
-            _reset_slot, donate_argnums=(0,),
+        self._reset = self.jitwatch.wrap(
+            "slot_reset", _reset_slot, max_traces=1, donate_argnums=(0,),
             **({"out_shardings": ns} if ns is not None else {}))
-        self._activate = jax.jit(
-            _set_active, donate_argnums=(0,), static_argnums=(2,),
+        self._activate = self.jitwatch.wrap(
+            "slot_activate", _set_active, max_traces=2,  # static flag arg
+            donate_argnums=(0,), static_argnums=(2,),
             **({"out_shardings": ns} if ns is not None else {}))
         self._free = list(range(n_slots))      # host mirror of ~active
         self._live: Dict[int, Request] = {}    # slot -> decoding request
         self._jobs: deque = deque()            # chunked prefills in flight
+        self._rows_useful = 0                  # token rows that reached a req
+        self._rows_dispatched = 0              # rows pushed through the chips
+        # Telemetry is always collected (one code path — metrics can't
+        # perturb what they measure) into a private registry unless the
+        # caller supplies a shared one; the trace buffer is opt-in.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.trace = trace
+        self.chipmeter = ChipMeter.from_params(
+            params, cfg.cim_in_bits, cfg.cim_out_bits)
+        m = self.metrics
+        self._m_admitted = m.counter(
+            "serve_requests_admitted", "requests admitted to a slot")
+        self._m_finished = m.counter(
+            "serve_requests_finished", "requests fully served")
+        self._m_chunks = m.counter(
+            "serve_prefill_chunks", "prefill chunk dispatches")
+        self._m_steps = m.counter(
+            "serve_decode_steps", "pool decode step dispatches")
+        self._m_tok_gen = m.counter(
+            "serve_tokens_generated", "tokens emitted to requests")
+        self._m_tok_pre = m.counter(
+            "serve_tokens_prefilled", "prompt tokens prefilled")
+        self._g_occ = m.gauge(
+            "serve_slots_occupied", "live decoding slots (of n_slots)")
+        self._g_queue = m.gauge(
+            "serve_queue_depth", "requests waiting: arrived, no slot yet")
+        self._h_decode = m.histogram(
+            "serve_decode_step_s", "pool decode step wall seconds")
+        self._h_chunk = m.histogram(
+            "serve_prefill_chunk_s", "prefill chunk wall seconds")
+        self._h_ttft = m.histogram(
+            "serve_ttft_s", "arrival to first token, seconds")
+        self._h_req = m.histogram(
+            "serve_request_s", "arrival to last token, seconds")
+        self._h_tok = m.histogram(
+            "serve_token_lat_s", "per-token step latency, seconds")
 
     # ------------------------------------------------------------- plumbing
 
@@ -202,6 +249,10 @@ class ContinuousBatchingEngine:
             toks = jnp.zeros((1, int(n)), jnp.int32)
             _, self.pool = self._prefill(self.params, self.pool, toks,
                                          jnp.int32(0))
+        # both static variants of the activate flag, so a sealed watcher
+        # sees no fresh traces on the first real admit/evict
+        self.pool = self._activate(self.pool, jnp.int32(0), True)
+        self.pool = self._activate(self.pool, jnp.int32(0), False)
         self.pool = self._reset(self.pool, jnp.int32(0))
         _, self.pool = self._decode(self.params, self.pool)
         jax.block_until_ready(self.pool)
@@ -215,6 +266,29 @@ class ContinuousBatchingEngine:
         assert slot not in self._live, "slot double-assign"
         self.pool = self._reset(self.pool, jnp.int32(slot))
         self._jobs.append(_PrefillJob(slot, req, self._chunks(req.prompt)))
+        self._m_admitted.inc()
+
+    def _request_done(self, req: Request, slot: int) -> None:
+        """Telemetry at a request's last token: latency histograms, its
+        attributed chip energy (useful rows x per-token stack cost — the
+        first generated token rides the final prefill chunk, so decode
+        rows are len(tokens) - 1), and its trace span."""
+        self._m_finished.inc()
+        self._h_req.observe(req.t_done - req.arrival)
+        rows = len(req.prompt) + max(len(req.tokens) - 1, 0)
+        req.energy_pj = rows * self.chipmeter.per_token_pj()
+        if self.trace is not None:
+            t_admit = req.t_admit if req.t_admit >= 0 else req.arrival
+            start = min(req.arrival, t_admit)
+            self.trace.name_thread(REQUEST_PID, req.rid, f"req {req.rid}")
+            self.trace.complete(
+                "request", start, req.t_done - start,
+                pid=REQUEST_PID, tid=req.rid,
+                args={"rid": req.rid, "slot": slot,
+                      "prompt_len": len(req.prompt),
+                      "tokens": len(req.tokens),
+                      "ttft_s": req.t_first,
+                      "energy_pj": req.energy_pj})
 
     def _finish(self, slot: int, now: float) -> None:
         req = self._live.pop(slot)
@@ -222,23 +296,41 @@ class ContinuousBatchingEngine:
         self.pool = self._activate(self.pool, jnp.int32(slot), False)
         self._free.append(slot)
         self._free.sort()
+        self._request_done(req, slot)
 
     def _prefill_one_chunk(self, now: float) -> float:
         """Run ONE chunk of the oldest in-flight prefill; returns step
         seconds. On the final chunk the slot goes live (its first token was
         seeded into pool['tok'] by the chunk step)."""
         job = self._jobs[0]
-        toks = jnp.asarray(job.chunks[job.next][None], jnp.int32)
+        chunk = job.chunks[job.next]
+        toks = jnp.asarray(chunk[None], jnp.int32)
         (logits, self.pool), dt = timed_call(
             self._prefill, self.params, self.pool, toks, jnp.int32(job.slot))
         job.next += 1
+        n_rows = len(chunk)
+        self._m_chunks.inc()
+        self._m_tok_pre.inc(n_rows)
+        self._h_chunk.observe(dt)
+        self.chipmeter.count_rows(n_rows)
+        self._rows_useful += n_rows
+        self._rows_dispatched += n_rows
+        if self.trace is not None:
+            args = {"slot": job.slot, "rid": job.req.rid, "rows": n_rows,
+                    "chunk": job.next, "of": len(job.chunks)}
+            self.trace.complete("prefill_chunk", now, dt, args=args)
+            self.trace.complete("prefill_chunk", now, dt, pid=REQUEST_PID,
+                                tid=job.req.rid, args=args)
         if job.next == len(job.chunks):
             self._jobs.popleft()
             req = job.req
             first = int(np.argmax(np.asarray(logits[0])))
             req.tokens.append(first)
             req.token_lat.append(dt)
+            self._m_tok_gen.inc()
+            self._h_tok.observe(dt)
             req.t_first = now + dt - req.arrival
+            self._h_ttft.observe(req.t_first)
             if self.capture_logits:
                 req.logits.append(np.asarray(logits[0]))
             if req.max_new == 1:
@@ -246,6 +338,7 @@ class ContinuousBatchingEngine:
                 self.pool = self._reset(self.pool, jnp.int32(job.slot))
                 self._free.append(job.slot)
                 self._free.sort()
+                self._request_done(req, job.slot)
             else:
                 self.pool = self._activate(self.pool, jnp.int32(job.slot),
                                            True)
@@ -255,13 +348,31 @@ class ContinuousBatchingEngine:
     def _decode_once(self, now: float) -> float:
         (logits, self.pool), dt = timed_call(self._decode, self.params,
                                              self.pool)
+        # Honest hardware accounting: the weight-stationary pool step
+        # pushes ALL n_slots rows through every chip regardless of
+        # occupancy — empty slots still cost energy. The useful/dispatched
+        # ratio surfaces as the run's `utilization`.
+        n_live = len(self._live)
+        self._m_steps.inc()
+        self._m_tok_gen.inc(n_live)
+        self._h_decode.observe(dt)
+        self.chipmeter.count_rows(self.n_slots)
+        self._rows_useful += n_live
+        self._rows_dispatched += self.n_slots
+        if self.trace is not None:
+            self.trace.complete("decode_step", now, dt,
+                                args={"live": n_live})
         toks = np.asarray(self.pool["tok"][:, 0])
         done = []
         for slot, req in self._live.items():
             req.tokens.append(int(toks[slot]))
             req.token_lat.append(dt)
+            self._h_tok.observe(dt)
             if self.capture_logits:
                 req.logits.append(np.asarray(logits[slot]))
+            if self.trace is not None:
+                self.trace.complete("decode", now, dt, pid=REQUEST_PID,
+                                    tid=req.rid, args={"slot": slot})
             if len(req.tokens) >= req.max_new:
                 done.append(slot)
         for slot in done:
@@ -280,30 +391,59 @@ class ContinuousBatchingEngine:
         if warm:
             self.warmup({c.shape[0] for r in requests
                          for c in self._chunks(r.prompt)})
+            # warmup compiled every shape this run can produce — from here
+            # on, any trace on any entry point is a contract violation
+            self.jitwatch.seal()
+        if self.trace is not None:
+            self.trace.name_process(ENGINE_PID, "engine")
+            self.trace.name_process(REQUEST_PID, "requests")
         pending = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
-        t0 = time.perf_counter()
+        t0 = clock_now()
         step_lat: List[float] = []
+        occ_last = (-1, -1, -1)
         while pending or self._jobs or self._live:
-            now = time.perf_counter() - t0
+            now = clock_now() - t0
             while pending and self._free and \
                     (not realtime or pending[0].arrival <= now):
+                pending[0].t_admit = now
                 self._admit(pending.popleft())
+            arrived = sum(r.arrival <= now for r in pending) \
+                if realtime else len(pending)
+            self._g_occ.set(len(self._live))
+            self._g_queue.set(arrived + len(self._jobs))
+            occ = (len(self._live), len(self._jobs), arrived)
+            if self.trace is not None and occ != occ_last:
+                occ_last = occ
+                self.trace.counter("occupancy", now, {
+                    "live_slots": occ[0], "prefilling": occ[1],
+                    "queued": occ[2]})
             busy = False
+            # each step re-reads the clock: prefill and decode run
+            # sequentially within an iteration, and span starts must
+            # reflect the wall time the step actually began — stamping
+            # both with the top-of-loop `now` would overlap their spans
+            # (and let a slow prefill's span spill past a request that
+            # finished in the decode right after it)
             if self._jobs:
-                self._prefill_one_chunk(now)
+                self._prefill_one_chunk(clock_now() - t0)
                 busy = True
             if self._live:
-                step_lat.append(self._decode_once(now))
+                step_lat.append(self._decode_once(clock_now() - t0))
                 busy = True
             if not busy:
                 # idle: nothing in flight, next request not yet arrived
                 if pending and realtime:
-                    wait = pending[0].arrival - (time.perf_counter() - t0)
+                    wait = pending[0].arrival - (clock_now() - t0)
                     if wait > 0:
                         time.sleep(min(wait, 0.05))
-        wall = time.perf_counter() - t0
+        wall = clock_now() - t0
+        self._g_occ.set(0)
+        self._g_queue.set(0)
+        self.chipmeter.export(self.metrics)
+        self.jitwatch.export(self.metrics)
         lats = np.asarray([dt for r in requests for dt in r.token_lat])
         total = sum(len(r.tokens) for r in requests)
+        energy_pj = self.chipmeter.energy_pj()
         return {
             "requests": len(requests),
             "tokens": total,
@@ -314,21 +454,42 @@ class ContinuousBatchingEngine:
             "ttft_p50_ms": float(np.percentile(
                 [r.t_first for r in requests], 50) * 1e3) if requests else 0.0,
             "decode_traces": self.decode_traces(),
+            "mvm_dispatches": self.chipmeter.mvm_dispatches(),
+            "energy_pj": energy_pj,
+            "pj_per_token": energy_pj / total if total else 0.0,
+            "tops_per_w": self.chipmeter.tops_per_w(),
+            "utilization": (self._rows_useful / self._rows_dispatched
+                            if self._rows_dispatched else 0.0),
         }
 
 
 def serve_static(cfg, params, requests: List[Request], batch: int,
                  max_len: int, *, capture_logits: bool = False,
-                 realtime: bool = True) -> Dict[str, Any]:
+                 realtime: bool = True,
+                 metrics: Optional[MetricsRegistry] = None) -> Dict[str, Any]:
     """The static-batch baseline at equal request load: requests are taken
     in arrival order, grouped into fixed batches of `batch`, prompts padded
     to the group max, prefilled once, then decoded in lockstep until every
     member hits its max_new (today's serve.py loop). Used by
-    benchmarks/bench_serving.py as the tokens/sec comparison point."""
+    benchmarks/bench_serving.py as the tokens/sec comparison point.
+
+    Metered with the same ChipMeter model as the engine, under static-path
+    rules: prefill dispatches group_size x padded_len rows (left-padding is
+    real dispatched work on a weight-stationary chip), decode dispatches
+    group_size rows per lockstep step even for members already done — the
+    padding + lockstep waste is exactly what `utilization` exposes against
+    the continuous engine's number."""
     from .steps import make_decode_step
     sv = arch_serving(cfg)
     prefill = jax.jit(sv.prefill)
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    meter = ChipMeter.from_params(params, cfg.cim_in_bits, cfg.cim_out_bits)
+    m = metrics if metrics is not None else MetricsRegistry()
+    h_pre = m.histogram("static_prefill_s", "static batch prefill seconds")
+    h_dec = m.histogram("static_decode_step_s", "static decode step seconds")
+    c_tok = m.counter("static_tokens", "tokens emitted by the static path")
+    rows_useful = 0
+    rows_dispatched = 0
     reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
     groups = [reqs[i:i + batch] for i in range(0, len(reqs), batch)]
     # warmup: compile each distinct (group size, padded prompt len) prefill
@@ -341,10 +502,10 @@ def serve_static(cfg, params, requests: List[Request], batch: int,
                                 jnp.zeros((gb, lp), jnp.int32))
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         jax.block_until_ready(decode(params, cache, tok))
-    t0 = time.perf_counter()
+    t0 = clock_now()
     for group in groups:
         if realtime:  # the whole batch must have arrived before it forms
-            wait = max(r.arrival for r in group) - (time.perf_counter() - t0)
+            wait = max(r.arrival for r in group) - (clock_now() - t0)
             if wait > 0:
                 time.sleep(wait)
         lp = max(len(r.prompt) for r in group)
@@ -354,30 +515,41 @@ def serve_static(cfg, params, requests: List[Request], batch: int,
         cache = sv.init_state(len(group), max_len)
         (logits, cache), dt = timed_call(prefill, params, cache,
                                          jnp.asarray(prompts))
+        h_pre.observe(dt)
+        meter.count_rows(len(group) * lp)
+        rows_useful += sum(len(r.prompt) for r in group)
+        rows_dispatched += len(group) * lp
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        now = time.perf_counter() - t0
+        now = clock_now() - t0
         for j, r in enumerate(group):
             r.tokens.append(int(tok[j, 0]))
             r.token_lat.append(dt)
             r.t_first = now - r.arrival
+            c_tok.inc()
             if capture_logits:
                 r.logits.append(np.asarray(logits[j]))
         gen_max = max(r.max_new for r in group)
         for _ in range(gen_max - 1):
             (logits, cache), dt = timed_call(decode, params, cache, tok)
+            h_dec.observe(dt)
+            meter.count_rows(len(group))
+            rows_dispatched += len(group)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            now = time.perf_counter() - t0
+            now = clock_now() - t0
             for j, r in enumerate(group):
                 if len(r.tokens) < r.max_new:  # lockstep: extras discarded
                     r.tokens.append(int(tok[j, 0]))
                     r.token_lat.append(dt)
+                    rows_useful += 1
+                    c_tok.inc()
                     if capture_logits:
                         r.logits.append(np.asarray(logits[j]))
         for r in group:
-            r.t_done = time.perf_counter() - t0
-    wall = time.perf_counter() - t0
+            r.t_done = clock_now() - t0
+    wall = clock_now() - t0
     lats = np.asarray([dt for r in reqs for dt in r.token_lat])
     total = sum(len(r.tokens) for r in reqs)
+    energy_pj = meter.energy_pj()
     return {
         "requests": len(reqs),
         "tokens": total,
@@ -385,4 +557,9 @@ def serve_static(cfg, params, requests: List[Request], batch: int,
         "tok_per_s": total / wall if wall > 0 else 0.0,
         "p50_ms": float(np.percentile(lats, 50) * 1e3) if total else 0.0,
         "p99_ms": float(np.percentile(lats, 99) * 1e3) if total else 0.0,
+        "mvm_dispatches": meter.mvm_dispatches(),
+        "energy_pj": energy_pj,
+        "pj_per_token": energy_pj / total if total else 0.0,
+        "utilization": (rows_useful / rows_dispatched
+                        if rows_dispatched else 0.0),
     }

@@ -11,7 +11,7 @@ same programmed conductances serve every request):
   * default (static batch): one fixed request batch is prefilled once,
     then decoded token-by-token in lockstep (greedy) with the cache
     updated in place (donated). Both the prefill and decode jits are
-    timed through benchmarks/_timing.timed_call — block_until_ready
+    timed through repro.obs.clock.timed_call — block_until_ready
     around each step, warmup (compile) excluded from the per-token stats.
   * --traffic (continuous batching): an open-loop Poisson request stream
     (data/synthetic.traffic_requests — mixed prompt lengths, per-request
@@ -62,7 +62,7 @@ same CIMConfig from it via models/nn.arch_cim_config).
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import jax.numpy as jnp
@@ -70,8 +70,44 @@ import jax.numpy as jnp
 from .. import configs
 from ..models import transformer as T
 from ..data import lm_tokens
-from .scheduler import timed_call
+from ..obs import MetricsRegistry, TraceBuffer
+from ..obs.chipmeter import ChipMeter
+from ..obs.clock import stopwatch, timed_call
 from .steps import arch_serving, make_decode_step
+
+
+def _add_obs_flags(ap):
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry as JSON at exit")
+    ap.add_argument("--prom-out", default="",
+                    help="write the metrics registry in Prometheus text "
+                         "exposition format at exit")
+    ap.add_argument("--trace-out", default="",
+                    help="write per-request span timelines as Chrome "
+                         "trace-event JSON (open in Perfetto) at exit")
+    ap.add_argument("--summary-out", default="",
+                    help="write the run's summary stats as JSON")
+    ap.add_argument("--strict-jit", action="store_true",
+                    help="turn the one-trace-per-plan contract into a hard "
+                         "assertion: any steady-state retrace raises")
+
+
+def _write_obs(args, metrics, trace=None, summary=None):
+    """Flush whichever observability outputs were requested."""
+    if args.metrics_out:
+        metrics.write_json(args.metrics_out)
+        print(f"metrics: wrote {args.metrics_out}")
+    if args.prom_out:
+        metrics.write_prometheus(args.prom_out)
+        print(f"metrics: wrote {args.prom_out}")
+    if args.trace_out and trace is not None:
+        trace.write(args.trace_out)
+        print(f"trace: wrote {args.trace_out} ({len(trace.events)} events)")
+    if args.summary_out and summary is not None:
+        with open(args.summary_out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"summary: wrote {args.summary_out}")
 
 
 def main(argv=None):
@@ -118,6 +154,7 @@ def main(argv=None):
                          "multi-shard dispatches under shard_map; 'off' "
                          "keeps the unrolled in-process shard loop; 'DxM' "
                          "(e.g. '1x8') forces a (data, model) shape")
+    _add_obs_flags(ap)
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
@@ -159,11 +196,11 @@ def main(argv=None):
         # (models/nn._resolve_mesh) so width and placement cannot disagree
         mesh_shape = serving_mesh_shape() if mesh is None else None
         spec = CoreSpec(n_cores=args.cim_cores) if args.cim_cores else None
-        t0 = time.time()
         from ..core.verify import verify_deployed
-        params = verify_deployed(sv.deploy_cim(
-            jax.random.PRNGKey(7), params, mode=args.cim_mode,
-            mesh_shape=mesh_shape, spec=spec))
+        with stopwatch() as sw:
+            params = verify_deployed(sv.deploy_cim(
+                jax.random.PRNGKey(7), params, mode=args.cim_mode,
+                mesh_shape=mesh_shape, spec=spec))
         tp = (dict(mesh.shape)["model"] if mesh is not None
               else mesh_shape.get("model", 1))
         n_packed = sum(1 for k in params["layers"] if k.endswith("_cim"))
@@ -177,7 +214,7 @@ def main(argv=None):
               f"x {cfg.n_layers} layers{shared} ({args.cim_mode}, "
               f"bits={cfg.cim_in_bits}/{cfg.cim_out_bits}, "
               f"tp={tp}, exec={exec_mode}) "
-              f"in {time.time() - t0:.1f}s")
+              f"in {sw.s:.1f}s")
     if args.traffic:
         return _serve_traffic(args, cfg, params, mesh)
 
@@ -208,11 +245,19 @@ def main(argv=None):
     prefill = jax.jit(sv.prefill, **pin)
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,), **pin)
 
-    # timed_call (benchmarks/_timing): block_until_ready around the step.
-    # The first prefill/decode dispatch carries compile time, so per-token
-    # stats start at the second decode step (warmup excluded).
+    # timed_call (repro.obs.clock, re-exported by benchmarks/_timing):
+    # block_until_ready around the step. The first prefill/decode dispatch
+    # carries compile time, so per-token stats start at the second decode
+    # step (warmup excluded).
+    metrics = MetricsRegistry()
+    meter = ChipMeter.from_params(params, cfg.cim_in_bits, cfg.cim_out_bits)
+    h_dec = metrics.histogram("static_decode_step_s",
+                              "static decode step seconds")
     (logits, cache), t_prefill = timed_call(prefill, params, cache, prompts,
                                             memory)
+    metrics.histogram("static_prefill_s",
+                      "static batch prefill seconds").observe(t_prefill)
+    meter.count_rows(args.batch * args.prompt_len)
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
     generated = [tok]
@@ -222,10 +267,12 @@ def main(argv=None):
         if memory is not None:
             batch["memory"] = memory
         (logits, cache), dt = timed_call(decode, params, cache, batch)
+        meter.count_rows(args.batch)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         generated.append(tok)
         if i > 0:                       # step 0 compiles the decode jit
             step_lat.append(dt)
+            h_dec.observe(dt)
     t_decode = (sum(step_lat) / len(step_lat)) if step_lat else 0.0
     out = jnp.concatenate(generated, axis=1)
     tag = " cim=packed" if args.cim else ""
@@ -235,6 +282,26 @@ def main(argv=None):
           f"decode={t_decode*1e3:.1f}ms/tok "
           f"throughput={thr:.1f} tok/s")
     print("sample token ids:", out[0, :16].tolist())
+    meter.export(metrics)
+    n_tok = args.batch * args.gen
+    energy_pj = meter.energy_pj()
+    summary = {
+        "mode": "static",
+        "arch": cfg.name,
+        "cim": bool(args.cim),
+        "batch": args.batch,
+        "prompt_len": args.prompt_len,
+        "gen": args.gen,
+        "tokens": n_tok,
+        "prefill_ms": t_prefill * 1e3,
+        "decode_ms_per_tok": t_decode * 1e3,
+        "tok_per_s": (args.batch / t_decode) if t_decode else 0.0,
+        "mvm_dispatches": meter.mvm_dispatches(),
+        "energy_pj": energy_pj,
+        "pj_per_token": energy_pj / n_tok if n_tok else 0.0,
+        "sample_tokens": out[0, :16].tolist(),
+    }
+    _write_obs(args, metrics, summary=summary)
     return out
 
 
@@ -266,9 +333,12 @@ def _serve_traffic(args, cfg, params, mesh=None):
     reqs = [Request(rid=i, prompt=toks[i, :lens[i]],
                     max_new=int(tr.gen[i]), arrival=float(tr.arrivals[i]))
             for i in range(args.requests)]
+    metrics = MetricsRegistry()
+    trace = TraceBuffer() if args.trace_out else None
     eng = ContinuousBatchingEngine(cfg, params, n_slots=slots,
                                    max_len=max_len, chunk=args.chunk,
-                                   mesh=mesh)
+                                   mesh=mesh, metrics=metrics, trace=trace,
+                                   strict_jit=args.strict_jit)
     stats = eng.run(reqs)
     assert stats["decode_traces"] == 1, \
         f"decode retraced across occupancy changes: {stats['decode_traces']}"
@@ -280,6 +350,16 @@ def _serve_traffic(args, cfg, params, mesh=None):
           f"p50={stats['p50_ms']:.1f}ms p99={stats['p99_ms']:.1f}ms "
           f"ttft_p50={stats['ttft_p50_ms']:.1f}ms "
           f"decode_traces={stats['decode_traces']}")
+    if stats["energy_pj"] > 0:
+        print(f"chip energy: {stats['energy_pj']/1e6:.2f} uJ "
+              f"({stats['pj_per_token']/1e3:.1f} nJ/token, "
+              f"{stats['tops_per_w']:.2f} TOPS/W, "
+              f"utilization={stats['utilization']:.2f})")
+    summary = dict(stats)
+    summary.update({"mode": "traffic", "arch": cfg.name,
+                    "cim": bool(args.cim), "slots": slots,
+                    "chunk": args.chunk, "rate": args.rate})
+    _write_obs(args, metrics, trace=trace, summary=summary)
     return stats
 
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .. import configs
 from ..models import transformer as T
 from ..data import lm_tokens
+from ..obs.clock import now as clock_now
 from ..distributed.sharding import (param_pspecs, batch_pspecs, fit_pspecs,
                                     opt_pspecs)
 from ..distributed.fault import FaultTolerantTrainer
@@ -110,14 +110,14 @@ def main(argv=None):
     state, start = trainer.resume((params, opt))
     print(f"starting at step {start}")
     it = data_iter()
-    t0 = time.time()
+    t0 = clock_now()
     losses = []
     for s in range(start, args.steps):
         state = wrapped(state, next(it))
         losses.append(wrapped.last_loss)
         if s % 5 == 0 or s == args.steps - 1:
             print(f"step {s} loss {wrapped.last_loss:.4f} "
-                  f"({(time.time()-t0)/(s-start+1):.2f}s/step)")
+                  f"({(clock_now()-t0)/(s-start+1):.2f}s/step)")
         if (s + 1) % args.ckpt_every == 0:
             trainer.ckpt.save(s + 1, state)
     trainer.ckpt.wait()

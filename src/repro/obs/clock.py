@@ -1,0 +1,72 @@
+"""The ONE serve-path wall clock.
+
+Every timestamp a serving module reports — per-step latencies, arrival
+offsets, compile times — comes from here, so every number that lands in a
+metrics histogram, a trace span or a printed summary is measured the same
+way. `benchmarks/_timing` re-exports `timed_call` (the bench harnesses and
+the engine must share a clock, or "continuous beats static" claims become
+unfalsifiable), and lint rule R006 (tools/lint.py) keeps bare
+`time.time()` / `time.perf_counter()` calls off serving-path modules so
+this stays the single implementation.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+
+def now() -> float:
+    """Monotonic seconds (perf_counter) — the serve-path timebase.
+
+    Only differences are meaningful; every module that subtracts two
+    timestamps must take both from this function.
+    """
+    return time.perf_counter()
+
+
+def timed_call(fn, *args):
+    """(result, seconds) for ONE dispatch, block_until_ready included —
+    the serve-path per-token clock (launch/scheduler + serve.py). The
+    result is kept (serving steps mutate donated state, so they cannot be
+    re-run for a best-of loop) and compile time is NOT excluded here —
+    callers warm the jit first (scheduler.warmup / the serve drivers'
+    warmup step) and exclude the warmup from stats."""
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+class _Stopwatch:
+    """Elapsed-seconds holder for `stopwatch()`; `.s` is live until the
+    context exits, then frozen at the final elapsed value."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._frozen = None
+
+    @property
+    def s(self) -> float:
+        if self._frozen is not None:
+            return self._frozen
+        return time.perf_counter() - self._t0
+
+    def freeze(self):
+        self._frozen = time.perf_counter() - self._t0
+
+
+@contextlib.contextmanager
+def stopwatch():
+    """Coarse phase timing (deploy/compile/train), R006-clean:
+
+        with stopwatch() as sw:
+            ...long phase...
+        print(f"took {sw.s:.1f}s")
+    """
+    sw = _Stopwatch()
+    try:
+        yield sw
+    finally:
+        sw.freeze()

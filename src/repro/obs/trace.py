@@ -1,0 +1,93 @@
+"""Per-request span timelines as Chrome trace-event JSON.
+
+The engine records spans with its own relative timebase (seconds since
+run start, straight off `obs/clock`); export converts to the microsecond
+`ts`/`dur` floats the Chrome trace-event format wants, so the file loads
+directly in Perfetto / chrome://tracing / `about:tracing`.
+
+Layout convention used by `launch/scheduler`:
+
+  * pid ENGINE_PID ("engine"), tid 0: whole-engine "decode_step" /
+    "prefill_chunk" slices plus "occupancy" counter tracks (occupied
+    slots, prefill queue, pending arrivals).
+  * pid REQUEST_PID ("requests"), one tid PER REQUEST (tid = rid): a
+    "request" slice spanning arrival -> finish, with that request's
+    "prefill_chunk" / "decode" child slices nested inside it — Chrome
+    nests same-thread slices by interval containment, which the engine
+    guarantees by emitting children only between admit and finish.
+
+Every span also carries the raw seconds (`dur_s`) in `args`, so tests
+and tools can reconcile span sums against the engine's reported latency
+stats without round-tripping through the microsecond floats.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+ENGINE_PID = 1
+REQUEST_PID = 2
+
+
+class TraceBuffer:
+    """Append-only list of Chrome trace events (host-side, no clocks of
+    its own — callers pass timestamps from `obs/clock`)."""
+
+    def __init__(self):
+        self.events: List[dict] = []
+        self._named: set = set()
+
+    # ------------------------------------------------------------ naming
+
+    def name_process(self, pid: int, name: str) -> None:
+        if ("process", pid) in self._named:
+            return
+        self._named.add(("process", pid))
+        self.events.append({"ph": "M", "name": "process_name", "pid": pid,
+                            "tid": 0, "args": {"name": name}})
+
+    def name_thread(self, pid: int, tid: int, name: str) -> None:
+        if ("thread", pid, tid) in self._named:
+            return
+        self._named.add(("thread", pid, tid))
+        self.events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                            "tid": tid, "args": {"name": name}})
+
+    # ------------------------------------------------------------ events
+
+    def complete(self, name: str, ts_s: float, dur_s: float, *,
+                 pid: int = ENGINE_PID, tid: int = 0, cat: str = "serve",
+                 args: Optional[Dict] = None) -> None:
+        """One complete ("X") slice; ts/dur in SECONDS (relative)."""
+        a = dict(args or {})
+        a["dur_s"] = dur_s
+        self.events.append({"ph": "X", "name": name, "cat": cat,
+                            "pid": pid, "tid": tid,
+                            "ts": ts_s * 1e6, "dur": dur_s * 1e6,
+                            "args": a})
+
+    def instant(self, name: str, ts_s: float, *, pid: int = ENGINE_PID,
+                tid: int = 0, cat: str = "serve",
+                args: Optional[Dict] = None) -> None:
+        self.events.append({"ph": "i", "name": name, "cat": cat,
+                            "pid": pid, "tid": tid, "ts": ts_s * 1e6,
+                            "s": "t", "args": dict(args or {})})
+
+    def counter(self, name: str, ts_s: float, values: Dict[str, float], *,
+                pid: int = ENGINE_PID) -> None:
+        self.events.append({"ph": "C", "name": name, "pid": pid, "tid": 0,
+                            "ts": ts_s * 1e6, "args": dict(values)})
+
+    # ------------------------------------------------------------ export
+
+    def to_dict(self) -> dict:
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def to_json(self, **json_kw) -> str:
+        json_kw.setdefault("indent", None)
+        return json.dumps(self.to_dict(), **json_kw)
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+            f.write("\n")

@@ -12,9 +12,9 @@ sys.path.insert(0, str(REPO / "tools"))
 import lint  # noqa: E402
 
 
-def rules_of(src: str, *, is_test: bool = False):
+def rules_of(src: str, *, is_test: bool = False, name: str = "snippet.py"):
     src = textwrap.dedent(src)
-    linter = lint.ModuleLinter(Path("snippet.py"), src, is_test=is_test)
+    linter = lint.ModuleLinter(Path(name), src, is_test=is_test)
     return sorted({v.rule for v in linter.run()})
 
 
@@ -145,6 +145,52 @@ def test_r005_eager_vs_jit_parity():
     assert rules_of(good, is_test=True) == []
 
 
+def test_r006_bare_clock_on_serving_path_only():
+    src = """
+        import time
+        def decode_loop(step, state):
+            t0 = time.perf_counter()
+            state = step(state)
+            return state, time.perf_counter() - t0
+    """
+    # serving-path names (path or stem) are in scope for the rule...
+    assert rules_of(src, name="src/repro/launch/driver.py") == ["R006"]
+    assert rules_of(src, name="my_scheduler.py") == ["R006"]
+    assert rules_of(src, name="bench_serving.py") == ["R006"]
+    # ...everything else is not (bench harnesses keep their own best_of)
+    assert rules_of(src, name="benchmarks/bench_kernel.py") == []
+    # the clock's own home and its re-export are exempt
+    assert rules_of(src, name="src/repro/obs/clock.py") == []
+    assert rules_of(src, name="benchmarks/_timing.py") == []
+    # tests may time however they like
+    assert rules_of(src, name="src/repro/launch/driver.py",
+                    is_test=True) == []
+
+
+def test_r006_from_import_alias_sleep_and_suppression():
+    alias = """
+        from time import perf_counter as pc
+        def serve(step, state):
+            t0 = pc()
+            return step(state), pc() - t0
+    """
+    assert rules_of(alias, name="launch/serve2.py") == ["R006"]
+    sleep_ok = """
+        import time
+        def serve(step, state, wait):
+            time.sleep(wait)          # pacing, not measurement
+            return step(state)
+    """
+    assert rules_of(sleep_ok, name="launch/serve2.py") == []
+    suppressed = """
+        import time
+        def serve(step, state):
+            t0 = time.time()  # lint: disable=R006
+            return step(state), time.time() - t0  # lint: disable=R006
+    """
+    assert rules_of(suppressed, name="launch/serve2.py") == []
+
+
 def test_disable_comment_suppresses():
     src = """
         import jax
@@ -170,7 +216,7 @@ def test_fixtures_declare_their_findings():
         assert got == expected, f.name
         seen |= expected
     # the historical bug classes all have a failing fixture
-    assert {"R001", "R002", "R003", "R004", "R005"} <= seen
+    assert {"R001", "R002", "R003", "R004", "R005", "R006"} <= seen
 
 
 def test_repo_lands_clean():

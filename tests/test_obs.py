@@ -1,0 +1,291 @@
+"""Serving telemetry (src/repro/obs): registry semantics, chip-meter
+energy reconciliation against core/energy.mvm_cost, Chrome-trace span
+timelines, the jit-cache watchdog, and the zero-perturbation contract —
+serving with metrics + tracing on emits BITWISE the same tokens as
+serving with them off."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.core.energy import mvm_cost
+from repro.launch.scheduler import ContinuousBatchingEngine, Request
+from repro.launch.steps import arch_serving
+from repro.obs import MetricsRegistry, TraceBuffer
+from repro.obs.chipmeter import ChipMeter
+from repro.obs.jitwatch import JitRetraceError, JitWatcher
+from repro.obs.trace import ENGINE_PID, REQUEST_PID
+
+
+def _cfg(arch="gemma2-9b", cim=False):
+    cfg = configs.get(arch, smoke=True).replace(dtype=jnp.float32)
+    if cim:
+        cfg = cfg.replace(cim_mode="packed", moe_dropless=True)
+    return cfg
+
+
+def _params(cfg, cim=False):
+    sv = arch_serving(cfg)
+    params = sv.init_params(jax.random.PRNGKey(0))
+    if cim:
+        params = sv.deploy_cim(jax.random.PRNGKey(7), params, mode="ideal",
+                               mesh_shape={"model": 1})
+    return params
+
+
+def _requests(cfg, lens, gens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        (lens[i],)).astype(np.int32),
+                    max_new=gens[i]) for i in range(len(lens))]
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_counter_gauge_semantics():
+    r = MetricsRegistry()
+    c = r.counter("reqs", "requests")
+    c.inc()
+    c.inc(2, arch="a")
+    assert c.value() == 1 and c.value(arch="a") == 2
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = r.gauge("occ", "occupancy")
+    g.set(3, slot="0")
+    g.set(1, slot="0")
+    assert g.value(slot="0") == 1
+    # idempotent re-registration returns the SAME family; kind clash raises
+    assert r.counter("reqs") is c
+    with pytest.raises(ValueError):
+        r.gauge("reqs")
+    assert r.value("reqs", arch="a") == 2
+    assert r.value("absent") == 0.0
+
+
+def test_registry_histogram_quantiles_and_export():
+    r = MetricsRegistry()
+    h = r.histogram("lat_s", "latency")
+    vals = [0.001, 0.002, 0.004, 0.008, 0.1]
+    for v in vals:
+        h.observe(v)
+    assert h.count() == 5
+    assert h.sum() == pytest.approx(sum(vals))
+    # exact extremes; interior quantiles bucket-interpolated but monotone
+    assert h.quantile(0.0) == pytest.approx(min(vals))
+    assert h.quantile(1.0) == pytest.approx(max(vals))
+    qs = [h.quantile(q) for q in (0.1, 0.5, 0.9)]
+    assert qs == sorted(qs)
+    assert min(vals) <= qs[0] and qs[-1] <= max(vals)
+    d = r.to_dict()
+    (hist,) = d["histograms"]
+    assert hist["count"] == 5 and hist["min"] == min(vals)
+    # cumulative bucket counts end at the total, final bound is +Inf (None)
+    assert hist["buckets"][-1] == [None, 5]
+    assert all(b0[1] <= b1[1] for b0, b1 in zip(hist["buckets"],
+                                                hist["buckets"][1:]))
+    prom = r.to_prometheus()
+    assert '# TYPE lat_s histogram' in prom
+    assert 'lat_s_bucket{le="+Inf"} 5' in prom
+    assert "lat_s_count 5" in prom
+    # the JSON export round-trips
+    assert json.loads(r.to_json())["histograms"][0]["count"] == 5
+
+
+# ------------------------------------------------------------ chipmeter
+
+def test_chipmeter_reconciles_with_mvm_cost_exactly():
+    """For a deployed packed stack, per-chip cumulative energy equals
+    mvm_cost(rows, cols, bits).energy_pj * dispatches EXACTLY — the meter
+    stores integer dispatch counts and prices them through the same model
+    bench_mapping's precision rows use."""
+    cfg = _cfg(cim=True)
+    params = _params(cfg, cim=True)
+    meter = ChipMeter.from_params(params, cfg.cim_in_bits, cfg.cim_out_bits)
+    assert meter.entries, "deployed gemma2 stack must expose packed chips"
+    meter.count_rows(7)
+    meter.count_rows(3)
+    for (name, direction), e in meter.entries.items():
+        n = meter.mvm_dispatches(name, direction)
+        assert n == 10 * e.n_stack
+        cost = mvm_cost(e.rows, e.cols, e.in_bits, e.out_bits)
+        assert meter.energy_pj(name, direction) == cost.energy_pj * n
+    # totals are the sum of the per-entry exact products
+    assert meter.energy_pj() == sum(
+        meter.entries[k].cost.energy_pj * meter.mvm_dispatches(*k)
+        for k in meter.entries)
+    # ... and one row through the whole stack is the per-token cost
+    assert meter.per_token_pj() * 10 == pytest.approx(meter.energy_pj())
+
+
+def test_chipmeter_export_keeps_the_invariant():
+    cfg = _cfg(cim=True)
+    params = _params(cfg, cim=True)
+    meter = ChipMeter.from_params(params, cfg.cim_in_bits, cfg.cim_out_bits)
+    meter.count_rows(5)
+    r = MetricsRegistry()
+    meter.export(r)
+    meter.count_rows(6)
+    meter.export(r)                      # re-export must not drift
+    for (name, direction), e in meter.entries.items():
+        lab = {"chip": name, "direction": direction}
+        n = r.value("chip_mvm_dispatches", **lab)
+        assert n == meter.mvm_dispatches(name, direction)
+        assert r.value("chip_energy_pj", **lab) == \
+            r.value("chip_pj_per_mvm", **lab) * n
+
+
+def test_chipmeter_report_schema():
+    cfg = _cfg(cim=True)
+    params = _params(cfg, cim=True)
+    meter = ChipMeter.from_params(params, cfg.cim_in_bits, cfg.cim_out_bits)
+    meter.count_rows(2)
+    rep = meter.report()
+    assert rep["total_mvm_dispatches"] == meter.mvm_dispatches()
+    for row in rep["chips"]:
+        assert row["energy_pj"] == row["pj_per_mvm"] * row["mvm_dispatches"]
+
+
+# ------------------------------------------------------------- jitwatch
+
+def test_jitwatch_counts_traces_and_budget():
+    w = JitWatcher()
+    f = w.wrap("f", lambda x: x * 2, max_traces=1)
+    f(jnp.zeros((2,)))
+    f(jnp.ones((2,)))                    # same shape: no new trace
+    assert f.traces == 1 and f.calls == 2
+    f(jnp.zeros((3,)))                   # new shape: retrace (non-strict)
+    assert f.traces == 2 and f.over_budget
+    assert f._cache_size() == 2          # the raw counter is preserved
+    with pytest.raises(JitRetraceError):
+        w.check()
+    rep = w.report()["f"]
+    assert rep["traces"] == 2 and rep["compile_s"] > 0
+
+
+def test_jitwatch_strict_and_sealed_raise_at_the_call():
+    w = JitWatcher(strict=True)
+    f = w.wrap("f", lambda x: x + 1, max_traces=1)
+    f(jnp.zeros((2,)))
+    with pytest.raises(JitRetraceError, match="'f'"):
+        f(jnp.zeros((3,)))               # over budget under strict
+    w2 = JitWatcher()
+    g = w2.wrap("g", lambda x: x + 1)    # unbounded budget...
+    g(jnp.zeros((2,)))
+    w2.seal()                            # ...but sealed after warmup
+    g(jnp.zeros((2,)))                   # warmed shape: fine
+    with pytest.raises(JitRetraceError, match="sealed"):
+        g(jnp.zeros((4,)))
+
+
+def test_jitwatch_export():
+    w = JitWatcher()
+    f = w.wrap("decode", lambda x: x, max_traces=1)
+    f(jnp.zeros((2,)))
+    r = MetricsRegistry()
+    w.export(r)
+    assert r.value("jit_traces", entry="decode") == 1
+    assert r.value("jit_trace_budget", entry="decode") == 1
+    assert r.value("jit_calls", entry="decode") == 1
+
+
+# ------------------------------------------------- engine + trace spans
+
+def test_engine_trace_is_valid_chrome_json_with_nested_spans(tmp_path):
+    cfg = _cfg()
+    params = _params(cfg)
+    reqs = _requests(cfg, [32, 64, 32], [4, 3, 2])
+    trace = TraceBuffer()
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=96,
+                                   trace=trace)
+    eng.run(reqs, realtime=False)
+    path = tmp_path / "trace.json"
+    trace.write(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert all(ev["ph"] in ("X", "i", "C", "M") for ev in events)
+    req_spans = {ev["args"]["rid"]: ev for ev in events
+                 if ev["ph"] == "X" and ev["name"] == "request"}
+    assert sorted(req_spans) == [0, 1, 2]
+    for rid, span in req_spans.items():
+        assert span["pid"] == REQUEST_PID and span["tid"] == rid
+        t0, t1 = span["ts"], span["ts"] + span["dur"]
+        children = [ev for ev in events
+                    if ev["ph"] == "X" and ev["pid"] == REQUEST_PID
+                    and ev["tid"] == rid and ev["name"] != "request"]
+        # every per-request child span nests inside its request span
+        # (Chrome nests same-thread slices by interval containment);
+        # decode count = tokens after the prefill-carried first one
+        assert children
+        eps = 1e-3                       # us rounding slack
+        for ch in children:
+            assert ch["ts"] >= t0 - eps
+            assert ch["ts"] + ch["dur"] <= t1 + eps
+        n_dec = sum(ch["name"] == "decode" for ch in children)
+        assert n_dec == len(reqs[rid].tokens) - 1
+        # span args carry exact seconds: decode children sum to the
+        # request's recorded decode latencies (token_lat[0] is the final
+        # prefill chunk, which carries the first token)
+        dec_sum = sum(ch["args"]["dur_s"] for ch in children
+                      if ch["name"] == "decode")
+        assert dec_sum == pytest.approx(sum(reqs[rid].token_lat[1:]),
+                                        rel=1e-6)
+        pre = [ch for ch in children if ch["name"] == "prefill_chunk"]
+        assert len(pre) == -(-len(reqs[rid].prompt) // eng.chunk)
+        last_chunk = max(pre, key=lambda ch: ch["ts"])
+        assert last_chunk["args"]["dur_s"] == \
+            pytest.approx(reqs[rid].token_lat[0], rel=1e-6)
+    # engine-track slices + occupancy counter events exist
+    assert any(ev["ph"] == "X" and ev["pid"] == ENGINE_PID
+               for ev in events)
+    assert any(ev["ph"] == "C" and ev["name"] == "occupancy"
+               for ev in events)
+
+
+def test_engine_stats_reconcile_with_meters():
+    cfg = _cfg(cim=True)
+    params = _params(cfg, cim=True)
+    reqs = _requests(cfg, [32, 32], [3, 2])
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=64)
+    stats = eng.run(reqs, realtime=False)
+    # dispatch accounting: 2 prefill chunks x 32 rows + decode steps x
+    # n_slots rows, through every chip of the stack
+    assert stats["mvm_dispatches"] == eng.chipmeter.mvm_dispatches()
+    assert stats["energy_pj"] == eng.chipmeter.energy_pj()
+    assert 0 < stats["utilization"] <= 1
+    # per-request attributed energy: useful rows x per-token stack cost
+    ptok = eng.chipmeter.per_token_pj()
+    for r in reqs:
+        assert r.energy_pj == (len(r.prompt) + len(r.tokens) - 1) * ptok
+    # registry sees the same trace count the stats report
+    assert eng.metrics.value("jit_traces", entry="pool_decode") == \
+        stats["decode_traces"] == 1
+    assert eng.metrics.value("serve_tokens_generated") == stats["tokens"]
+    h = eng.metrics.get("serve_ttft_s")
+    assert h.count() == len(reqs)
+
+
+def test_metrics_do_not_perturb_tokens():
+    """The zero-overhead contract, stated as bitwise determinism: a run
+    with a shared registry + trace buffer + strict watchdog emits EXACTLY
+    the token ids of a bare run over the same request stream."""
+    cfg = _cfg()
+    params = _params(cfg)
+    lens, gens = [32, 64, 32, 32], [4, 2, 3, 5]
+
+    bare = _requests(cfg, lens, gens)
+    eng0 = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=96)
+    eng0.run(bare, realtime=False)
+
+    metered = _requests(cfg, lens, gens)
+    eng1 = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=96,
+                                    metrics=MetricsRegistry(),
+                                    trace=TraceBuffer(), strict_jit=True)
+    eng1.run(metered, realtime=False)
+
+    for r0, r1 in zip(bare, metered):
+        assert r0.tokens == r1.tokens, f"request {r0.rid} diverged"

@@ -1,0 +1,219 @@
+#!/usr/bin/env python
+"""Schema + invariant validation for serving telemetry exports.
+
+CI's metrics-smoke runs `serve --traffic --metrics-out --trace-out` and
+hands the files here. Three layers of checks, all on the EXPORTED files
+(not in-process state), so the validation covers the full write/read
+round trip an external dashboard would do:
+
+  1. Metrics JSON schema (obs/metrics.MetricsRegistry.to_dict): the
+     counters/gauges/histograms shape, non-negative counters, histogram
+     buckets cumulative-monotone with a trailing +Inf (le=None) bucket
+     whose count equals the exact count.
+  2. Chrome-trace JSON (obs/trace.TraceBuffer.to_dict): a traceEvents
+     list of X/i/C/M phase events with the fields Perfetto needs; every
+     "X" span carries its exact seconds in args.dur_s.
+  3. Serving invariants: the one-decode-trace contract
+     (jit_traces{entry="pool_decode"} == 1 — the PR 7 retrace bug class,
+     lint R001's runtime twin) and exact chip-energy reconciliation —
+     for every {chip, direction} series,
+     chip_energy_pj == chip_pj_per_mvm * chip_mvm_dispatches with no
+     float drift (the meter stores integer dispatch counts and takes one
+     product at export; see obs/chipmeter).
+
+Usage (exits non-zero on the first violated check):
+
+    python tools/check_obs.py --metrics M.json [--trace T.json]
+        [--no-decode-contract]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+TRACE_PHASES = {"X", "i", "C", "M"}
+
+
+class CheckError(Exception):
+    pass
+
+
+def _fail(msg: str) -> None:
+    raise CheckError(msg)
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        _fail(msg)
+
+
+# ------------------------------------------------------------- metrics
+
+def check_metrics_schema(doc: dict) -> None:
+    _require(isinstance(doc, dict) and
+             set(doc) == {"counters", "gauges", "histograms"},
+             "metrics: top level must be {counters, gauges, histograms}, "
+             f"got {sorted(doc) if isinstance(doc, dict) else type(doc)}")
+    for kind in ("counters", "gauges"):
+        for e in doc[kind]:
+            _require(set(e) == {"name", "labels", "value"},
+                     f"metrics: {kind} entry keys {sorted(e)}")
+            _require(isinstance(e["name"], str) and e["name"],
+                     f"metrics: unnamed {kind} entry")
+            _require(isinstance(e["labels"], dict),
+                     f"metrics: {e['name']}: labels must be a dict")
+            _require(isinstance(e["value"], (int, float)),
+                     f"metrics: {e['name']}: non-numeric value")
+            if kind == "counters":
+                _require(e["value"] >= 0,
+                         f"metrics: counter {e['name']} is negative")
+    for h in doc["histograms"]:
+        _require(set(h) == {"name", "labels", "count", "sum", "min",
+                            "max", "buckets"},
+                 f"metrics: histogram entry keys {sorted(h)}")
+        name = h["name"]
+        _require(h["count"] >= 0, f"metrics: {name}: negative count")
+        if h["count"] == 0:
+            _require(h["min"] is None and h["max"] is None,
+                     f"metrics: {name}: empty series with extremes")
+        else:
+            _require(h["min"] <= h["max"],
+                     f"metrics: {name}: min > max")
+        buckets = h["buckets"]
+        _require(buckets and buckets[-1][0] is None,
+                 f"metrics: {name}: missing trailing +Inf bucket")
+        prev_le, prev_cum = -float("inf"), 0
+        for le, cum in buckets:
+            _require(le is None or le > prev_le,
+                     f"metrics: {name}: bucket bounds not increasing")
+            _require(cum >= prev_cum,
+                     f"metrics: {name}: cumulative counts decrease")
+            prev_le = le if le is not None else prev_le
+            prev_cum = cum
+        _require(buckets[-1][1] == h["count"],
+                 f"metrics: {name}: +Inf cumulative {buckets[-1][1]} != "
+                 f"count {h['count']}")
+
+
+def _series(doc: dict, kind: str, name: str) -> dict:
+    """{frozen labels -> value} for one metric family."""
+    return {tuple(sorted(e["labels"].items())): e["value"]
+            for e in doc[kind] if e["name"] == name}
+
+
+def check_decode_contract(doc: dict) -> None:
+    traces = _series(doc, "gauges", "jit_traces")
+    key = (("entry", "pool_decode"),)
+    _require(key in traces,
+             "metrics: no jit_traces{entry=\"pool_decode\"} series — was "
+             "the engine's jitwatch exported?")
+    _require(traces[key] == 1,
+             f"one-decode-trace contract broken: jit_traces"
+             f"{{entry=\"pool_decode\"}} == {traces[key]} (expected 1)")
+    budgets = _series(doc, "gauges", "jit_trace_budget")
+    for lab, n in traces.items():
+        budget = budgets.get(lab, -1)
+        _require(budget < 0 or n <= budget,
+                 f"jit trace budget exceeded on {dict(lab)}: "
+                 f"{n} traces > budget {budget}")
+
+
+def check_energy_reconciliation(doc: dict) -> int:
+    """chip_energy_pj == chip_pj_per_mvm * chip_mvm_dispatches, exactly,
+    per labeled series. Returns the number of series reconciled."""
+    pj = _series(doc, "gauges", "chip_pj_per_mvm")
+    energy = _series(doc, "gauges", "chip_energy_pj")
+    mvms = _series(doc, "counters", "chip_mvm_dispatches")
+    _require(set(pj) == set(energy) == set(mvms),
+             "metrics: chip_* families disagree on labeled series: "
+             f"pj_per_mvm {len(pj)}, energy {len(energy)}, "
+             f"dispatches {len(mvms)}")
+    for lab in sorted(pj):
+        n = mvms[lab]
+        _require(n == int(n) and n >= 0,
+                 f"metrics: non-integer dispatch count on {dict(lab)}")
+        want = pj[lab] * n
+        _require(energy[lab] == want,
+                 f"chip energy does not reconcile on {dict(lab)}: "
+                 f"chip_energy_pj {energy[lab]!r} != pj_per_mvm "
+                 f"{pj[lab]!r} * {int(n)} dispatches == {want!r}")
+    return len(pj)
+
+
+# --------------------------------------------------------------- trace
+
+def check_trace_schema(doc: dict) -> int:
+    """Chrome trace-event JSON shape. Returns the event count."""
+    _require(isinstance(doc, dict) and "traceEvents" in doc,
+             "trace: missing traceEvents")
+    _require(doc.get("displayTimeUnit") in ("ms", "ns"),
+             f"trace: bad displayTimeUnit {doc.get('displayTimeUnit')!r}")
+    events = doc["traceEvents"]
+    _require(isinstance(events, list) and events, "trace: no events")
+    for ev in events:
+        ph = ev.get("ph")
+        _require(ph in TRACE_PHASES,
+                 f"trace: unknown phase {ph!r} on {ev.get('name')!r}")
+        _require(isinstance(ev.get("name"), str) and ev["name"],
+                 "trace: unnamed event")
+        _require(isinstance(ev.get("pid"), int),
+                 f"trace: {ev['name']}: missing pid")
+        if ph == "M":
+            continue
+        _require(isinstance(ev.get("ts"), (int, float)) and ev["ts"] >= 0,
+                 f"trace: {ev['name']}: bad ts")
+        if ph == "X":
+            _require(ev.get("dur", -1) >= 0,
+                     f"trace: span {ev['name']}: bad dur")
+            dur_s = ev.get("args", {}).get("dur_s")
+            _require(isinstance(dur_s, (int, float)),
+                     f"trace: span {ev['name']}: args.dur_s missing — "
+                     "exact seconds must ride along the rounded us")
+        if ph == "C":
+            args = ev.get("args", {})
+            _require(args and all(isinstance(v, (int, float))
+                                  for v in args.values()),
+                     f"trace: counter {ev['name']}: non-numeric series")
+    return len(events)
+
+
+# ----------------------------------------------------------------- cli
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate serve --metrics-out/--trace-out exports")
+    ap.add_argument("--metrics", required=True,
+                    help="metrics JSON (MetricsRegistry.to_dict)")
+    ap.add_argument("--trace", default="",
+                    help="Chrome trace-event JSON (TraceBuffer.to_dict)")
+    ap.add_argument("--no-decode-contract", action="store_true",
+                    help="skip the jit_traces{entry=pool_decode}==1 check "
+                         "(for exports from non-engine paths)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.metrics) as f:
+            metrics = json.load(f)
+        check_metrics_schema(metrics)
+        if not args.no_decode_contract:
+            check_decode_contract(metrics)
+        n_chips = check_energy_reconciliation(metrics)
+        n_events = 0
+        if args.trace:
+            with open(args.trace) as f:
+                trace = json.load(f)
+            n_events = check_trace_schema(trace)
+    except CheckError as e:
+        print(f"check_obs: FAIL: {e}", file=sys.stderr)
+        return 1
+    msg = (f"check_obs: OK — {n_chips} chip series reconcile exactly"
+           + ("" if args.no_decode_contract
+              else ", decode trace contract holds"))
+    if args.trace:
+        msg += f", {n_events} trace events well-formed"
+    print(msg)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -38,7 +38,11 @@
 # traffic-smoke that serves open-loop Poisson traffic through the
 # continuous-batching slot pool (launch/scheduler: admission/eviction +
 # chunked prefill interleaved with decode, CIM packed path, dense +
-# recurrent, one decode trace asserted), and a serving-bench-smoke that
+# recurrent, one decode trace asserted), a metrics-smoke that reruns the
+# traffic path with every telemetry output on (metrics JSON/Prometheus,
+# Chrome trace, summary, strict jit watchdog) and schema-validates the
+# exported files with tools/check_obs.py (decode-trace contract + exact
+# chip-energy reconciliation), and a serving-bench-smoke that
 # runs benchmarks/bench_serving.py in quick mode (continuous vs static
 # serving of one seeded stream) into BENCH_serving.json.
 # The bench gate is split by determinism: the
@@ -114,6 +118,24 @@ traffic_smoke() {
     --rate 200
 }
 
+metrics_smoke() {
+  echo "== metrics-smoke: telemetry export + invariant validation =="
+  # one traffic run with every observability output on (metrics JSON +
+  # Prometheus text + Chrome trace + machine summary, strict jit
+  # watchdog), then tools/check_obs.py re-validates the EXPORTED files:
+  # schema, the one-decode-trace contract
+  # (jit_traces{entry="pool_decode"} == 1) and exact chip-energy
+  # reconciliation (chip_energy_pj == chip_pj_per_mvm * dispatches)
+  local flags="--xla_force_host_platform_device_count=8"
+  XLA_FLAGS="$flags" python -m repro.launch.serve --smoke --cim --traffic \
+    --arch gemma2-9b --requests 6 --slots 2 --prompt-len 64 --gen 4 \
+    --rate 200 --strict-jit --metrics-out OBS_metrics.json \
+    --prom-out OBS_metrics.prom --trace-out OBS_trace.json \
+    --summary-out OBS_summary.json
+  python tools/check_obs.py --metrics OBS_metrics.json \
+    --trace OBS_trace.json
+}
+
 serving_bench_smoke() {
   echo "== serving-bench-smoke: continuous vs static traffic =="
   # one seeded request stream served twice (slotted pool vs static
@@ -133,6 +155,7 @@ case "$tier" in
     mesh_serve_smoke
     recover_smoke
     traffic_smoke
+    metrics_smoke
     serving_bench_smoke
     ;;
   full) exec python -m pytest -x -q ;;

@@ -32,6 +32,17 @@ actually shipped or reviewed out:
                                 with the contract under test (the repo's
                                 bitwise gates — packed-vs-loop,
                                 pool-vs-static — are all jit-vs-jit).
+  R006 bare-serve-clock         serving-path modules (launch/*, *serving*,
+                                *scheduler*) must take timestamps from
+                                repro.obs.clock (now / timed_call /
+                                stopwatch), not bare time.time() /
+                                time.perf_counter() — two clocks on the
+                                serve path make latency histograms, trace
+                                spans and "continuous beats static" rows
+                                mutually unfalsifiable. time.sleep is
+                                fine (pacing, not measurement); the obs
+                                package and benchmarks/_timing are the
+                                clock's own home and exempt.
 
 Pure AST analysis: nothing is imported or executed, so linting cannot be
 affected by (or affect) device state. Suppress a finding with a trailing
@@ -77,6 +88,11 @@ PARITY_FNS = re.compile(
     r"trees_all_close|trees_all_equal|equal)$")
 DISABLE_RE = re.compile(r"#\s*(?:lint:\s*disable|noqa:)\s*=?\s*"
                         r"(R\d{3}(?:\s*,\s*R\d{3})*)")
+# time-module functions that READ a clock (R006); time.sleep paces and is
+# allowed on the serving path
+CLOCK_FNS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+             "monotonic", "monotonic_ns", "process_time",
+             "process_time_ns"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -227,6 +243,8 @@ class ModuleLinter:
         self.rule_static_argnames()
         if self.is_test:
             self.rule_parity_jit_vs_jit()
+        if not self.is_test and self._serving_path_module():
+            self.rule_serve_clock()
         return self.violations
 
     # ----------------------------------------------- R001: out_shardings
@@ -472,6 +490,43 @@ class ModuleLinter:
                             f"'{hit}' inside '{fn.name}' — trace-time "
                             "branching bakes in one path (use jnp.where/"
                             "lax.cond, or mark the param static)")
+
+    # --------------------------------------------- R006: bare serve clock
+
+    def _serving_path_module(self) -> bool:
+        """Serving-path modules own no clocks of their own: anything under
+        launch/, or named *serving* / *scheduler*. The obs package (the
+        clock's home) and benchmarks/_timing (its re-export) are exempt."""
+        parts = self.path.parts
+        stem = self.path.stem
+        if "obs" in parts or stem in ("_timing", "clock"):
+            return False
+        return ("launch" in parts or "serving" in stem
+                or "scheduler" in stem)
+
+    def rule_serve_clock(self) -> None:
+        from_time: Set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in CLOCK_FNS:
+                        from_time.add(alias.asname or alias.name)
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name is None:
+                continue
+            bare = (name in from_time
+                    or (name.startswith("time.")
+                        and name.split(".", 1)[1] in CLOCK_FNS))
+            if bare:
+                self.report(
+                    "R006", node,
+                    f"bare clock `{name}()` on a serving-path module — "
+                    "take timestamps from repro.obs.clock (now / "
+                    "timed_call / stopwatch) so metrics histograms, trace "
+                    "spans and bench rows all measure with ONE clock")
 
     # ----------------------------------------- R004: static names/nums
 

@@ -1,0 +1,26 @@
+# lint-expect: R006
+"""Fixture: a serving-path module ('serving' in the stem) timing its own
+steps with bare time-module clocks instead of repro.obs.clock.
+
+One unsuppressed violation (time.perf_counter), one suppressed
+(time.time with a disable comment), a from-import alias violation, and an
+allowed time.sleep — pacing is not measurement.
+"""
+import time
+from time import perf_counter as pc
+
+
+def decode_loop(step, state, n):
+    lats = []
+    for _ in range(n):
+        t0 = time.perf_counter()              # R006: bare clock
+        state = step(state)
+        lats.append(pc() - t0)                # R006: aliased from-import
+        time.sleep(0.001)                     # allowed: pacing, not timing
+    return state, lats
+
+
+def deploy_phase(build):
+    t0 = time.time()  # lint: disable=R006
+    chip = build()
+    return chip, time.time() - t0  # lint: disable=R006
