@@ -51,6 +51,7 @@ def run():
         ("kernel_noisy_matmul_interpret", round(us_n, 1), 1),
     ]
     rows.extend(_autotune_rows(cfg))
+    rows.extend(_retile_rows(cfg))
     return rows
 
 
@@ -94,3 +95,26 @@ def _autotune_rows(cfg):
         rows.append((f"autotune_{tag}_bm{bm}", round(us_bm, 1),
                      int(bm == winner)))
     return rows
+
+
+def _retile_rows(cfg):
+    """Plan-time tile-geometry sweep (autotune.tune_tiling): the same
+    layer re-packed at every candidate (bk, bn), each statically
+    verified and timed at its best bm — one row per candidate, derived=1
+    on the cached winner. The layer shape is deliberately ragged (not a
+    multiple of any cap) so every candidate exercises edge-tile
+    padding."""
+    r, co = 300, 500
+    k = jax.random.PRNGKey(5)
+    w = 0.1 * jax.random.normal(k, (r, co))
+    cond = weights_to_conductances(w, cfg.device)
+    xb = jax.random.randint(jax.random.fold_in(k, 1), (256, r),
+                            -7, 8).astype(jnp.float32)
+    winner, sweeps = autotune.tune_tiling(
+        xb, cond.g_pos - cond.g_neg, gsum=cond.g_pos + cond.g_neg,
+        v_decr=0.002, activation=cfg.activation,
+        n_max=cfg.out_mag_levels, v_read=cfg.v_read,
+        timer=_time, refresh=True)
+    return [(f"retile_{r}x{co}_bk{bk}_bn{bn}", round(us, 1),
+             int((bk, bn) == winner))
+            for (bk, bn), us in sorted(sweeps.items())]

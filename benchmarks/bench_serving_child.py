@@ -1,0 +1,95 @@
+"""One data-parallel replica of the scaling bench (subprocess child).
+
+bench_serving's scaling rows spawn this module once per replica rank
+(à la bench_mesh_child.py): each child builds the SAME seeded traffic
+stream, takes the subset launch/distributed.route_requests assigns its
+rank, serves it closed-loop (realtime=False — arrival idle time would
+mask compute scaling) through its own ContinuousBatchingEngine +
+compiled chip stack, and prints ONE JSON dict on the last stdout line:
+
+    {"rank", "replicas", "requests", "tokens", "wall_s", "tok_per_s",
+     "decode_traces", "grouped"}
+
+Two launch shapes, chosen by the parent (benchmarks/bench_serving):
+
+  * grouped (--coordinator set): ranks run CONCURRENTLY as a real
+    jax.distributed group — the multi-host deployment shape. Honest
+    aggregate throughput on multi-core hosts.
+  * solo (no --coordinator): each rank runs as an independent process
+    (sequentially, on one-core CI boxes) with only routing-level
+    replica config. Models per-host throughput where concurrent ranks
+    would timeshare one core and measure nothing but contention.
+
+Either way the fleet aggregate is total tokens / slowest rank wall —
+replicas never talk, so fleet wall IS the max.
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import traffic_requests
+from repro.launch import distributed as dist
+from repro.launch.scheduler import ContinuousBatchingEngine, Request
+from repro.launch.steps import arch_serving
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--replicas", type=int, required=True)
+    ap.add_argument("--rank", type=int, required=True)
+    ap.add_argument("--coordinator", default="",
+                    help="host:port -> join a real jax.distributed group; "
+                         "empty -> solo replica (routing config only)")
+    ap.add_argument("--cim", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--max-prompt", type=int, default=64)
+    ap.add_argument("--max-gen", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    grouped = bool(args.coordinator)
+    if grouped:
+        dist.initialize(args.coordinator, args.replicas, args.rank)
+
+    cfg = configs.get(args.arch, smoke=True).replace(dtype=jnp.float32)
+    if args.cim:
+        cfg = cfg.replace(cim_mode="packed")
+    sv = arch_serving(cfg)
+    params = sv.init_params(jax.random.PRNGKey(0))
+    if args.cim:
+        params = sv.deploy_cim(jax.random.PRNGKey(7), params, mode="ideal",
+                               mesh_shape={"model": 1})
+
+    tr = traffic_requests(jax.random.PRNGKey(args.seed), args.requests,
+                          cfg.vocab, min_len=args.chunk,
+                          max_len=args.max_prompt, page=args.chunk,
+                          rate=100.0, min_gen=2, max_gen=args.max_gen)
+    toks, lens = np.asarray(tr.tokens), np.asarray(tr.lengths)
+    reqs = [Request(rid=i, prompt=toks[i, :lens[i]],
+                    max_new=int(tr.gen[i]), arrival=float(tr.arrivals[i]))
+            for i in range(args.requests)]
+    mine = dist.route_requests(reqs, args.replicas, args.rank)
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=args.slots,
+                                   max_len=args.max_prompt + args.max_gen,
+                                   chunk=args.chunk)
+    stats = eng.run(mine, realtime=False)
+    if stats["decode_traces"] != 1:
+        raise SystemExit(f"decode retraced on rank {args.rank}: "
+                         f"{stats['decode_traces']} traces")
+    print(json.dumps({
+        "rank": args.rank, "replicas": args.replicas,
+        "requests": stats["requests"], "tokens": stats["tokens"],
+        "wall_s": stats["wall_s"], "tok_per_s": stats["tok_per_s"],
+        "decode_traces": stats["decode_traces"], "grouped": grouped}))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,19 @@ inject their own timer so all reported numbers share one timing method.
 The signature deliberately buckets the batch to the next power of two:
 serving batches drift (prefill vs decode) and the winner is stable within
 a 2x band, so bucketing keeps the cache small and the hit rate high.
+
+bk/bn (the tile geometry itself) are ALSO sweepable — but only at PLAN
+time, not call time: a PackedPlan's bk/bn are its physical tile extents,
+and because every tile's analog partial sum is quantized by its own ADC,
+re-tiling a layer produces a DIFFERENT chip (same logical matmul,
+different quantization partition) that must go through program/calibrate
+before serving. `tune_tiling` runs that sweep offline: it re-packs the
+conductance matrices at each candidate geometry (`retile`), statically
+verifies every candidate plan (`core.verify.check_packed`, via the
+nested bm sweep which checks each bm before measuring), times each at
+its best bm, and caches the winning (bk, bn) per layer-shape signature
+(`_TILE_CACHE`). Planners consult `lookup_tiling` when choosing tile
+caps; nothing on the serving path ever re-tiles.
 """
 from __future__ import annotations
 
@@ -26,6 +39,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 _DEFAULT_BM = 256
 _CACHE: Dict[tuple, int] = {}
+_TILE_CACHE: Dict[tuple, Tuple[int, int]] = {}
 
 
 def _bucket(m: int) -> int:
@@ -137,6 +151,118 @@ def tune(x, packed, *, activation: str, n_max: int, v_read: float, seed=0,
     return winner, timings
 
 
+# ------------------------------------------------ plan-time re-tiling
+
+def tiling_signature(n_rows: int, n_cols: int, m: int, activation: str,
+                     fold_norm: bool) -> tuple:
+    """Cache key for a tiling winner: the layer's logical shape, the
+    batch bucket and the epilogue/denorm mode — everything the best tile
+    geometry can depend on at plan time."""
+    return (_bucket(max(int(m), 1)), int(n_rows), int(n_cols),
+            activation, bool(fold_norm))
+
+
+def lookup_tiling(n_rows: int, n_cols: int, m: int, activation: str,
+                  fold_norm: bool = False) -> Optional[Tuple[int, int]]:
+    """Cached winning (bk, bn) for this layer-shape signature, or None
+    before any `tune_tiling` (callers keep the planner default — the
+    full-core geometry of core/mapping.plan_layers)."""
+    return _TILE_CACHE.get(
+        tiling_signature(n_rows, n_cols, m, activation, fold_norm))
+
+
+def tiling_candidates(n_rows: int, n_cols: int, spec=None
+                      ) -> Tuple[Tuple[int, int], ...]:
+    """(bk, bn) candidates for a (n_rows, n_cols) layer: halvings of the
+    physical core caps (128 differential weight rows x 256 columns for
+    the NeuRRAM TNSA), clamped to the layer and deduplicated. Finer
+    tilings that would need more tiles than the chip has cores are
+    skipped — an unmerged single-pass pack claims one core per tile, so
+    such a candidate could never be planned on the real chip. The
+    coarsest geometry (the planner's own choice) is always first."""
+    from ...core.types import CoreSpec
+    spec = spec or CoreSpec()
+    row_cap, col_cap = spec.rows // 2, spec.cols
+    out = []
+    for bk in (row_cap, row_cap // 2, row_cap // 4):
+        for bn in (col_cap, col_cap // 2, col_cap // 4):
+            cand = (min(bk, int(n_rows)), min(bn, int(n_cols)))
+            n_tiles = (-(-int(n_rows) // cand[0])
+                       * (-(-int(n_cols) // cand[1])))
+            if cand not in out and (n_tiles <= spec.n_cores
+                                    or not out):
+                out.append(cand)
+    return tuple(out)
+
+
+def retile(gd, bk: int, bn: int, *, layer: str = "layer", gsum=None,
+           v_decr=1.0, fold_norm: bool = False):
+    """Re-pack a layer's (R, C) conductance matrices at an alternative
+    (bk, bn) tile geometry: the stage-1 splitter's uniform grid at
+    explicit caps instead of the physical maxima. The result is a
+    complete PackedPlan over the SAME gd/gsum values — candidate plans
+    for `tune_tiling`, or the winner's plan for a re-deploy. v_decr is a
+    scalar (per-tile calibration belongs to the old geometry and cannot
+    carry over — a retiled chip recalibrates)."""
+    from ...core.mapping import Tile, pack_tiles
+    R, C = gd.shape[-2], gd.shape[-1]
+    if not (0 < bk <= R and 0 < bn <= C):
+        raise ValueError(f"tile caps ({bk},{bn}) outside layer ({R},{C})")
+    tiles = [Tile(layer, i * bk, j * bn,
+                  min(bk, R - i * bk), min(bn, C - j * bn))
+             for i in range(-(-R // bk)) for j in range(-(-C // bn))]
+    return pack_tiles(tiles, gd, gsum=gsum, v_decr=v_decr,
+                      fold_norm=fold_norm)
+
+
+def tune_tiling(x, gd, *, activation: str, n_max: int, v_read: float,
+                gsum=None, v_decr=1.0, fold_norm: bool = False,
+                layer: str = "layer", spec=None, seed=0, interpret=None,
+                timer: Optional[Callable] = None, refresh: bool = False):
+    """Sweep the tile geometry for one layer: re-pack at every
+    `tiling_candidates` (bk, bn), verify each candidate plan with
+    `core.verify.check_packed` (through the nested bm sweep — each bm is
+    checked before it is measured, and a corrupt re-pack fails the whole
+    sweep), time each at its best bm, and cache the winner per
+    `tiling_signature`.
+
+    Returns (winner_(bk, bn), {(bk, bn): best duration}). A cache hit
+    without `refresh` returns the cached winner with an empty timing
+    dict. Candidates where every bm busts the VMEM budget are skipped;
+    all candidates busting is impossible (the coarsest candidate is the
+    planner's own geometry, which deploy already verified)."""
+    from ...core.verify import ChipVerifyError
+
+    key = tiling_signature(gd.shape[-2], gd.shape[-1], x.shape[0],
+                           activation, fold_norm)
+    if key in _TILE_CACHE and not refresh:
+        return _TILE_CACHE[key], {}
+    timings: Dict[Tuple[int, int], float] = {}
+    for bk, bn in tiling_candidates(gd.shape[-2], gd.shape[-1], spec):
+        packed = retile(gd, bk, bn, layer=layer, gsum=gsum,
+                        v_decr=v_decr, fold_norm=fold_norm)
+        try:
+            best_bm, sweeps = tune(x, packed, activation=activation,
+                                   n_max=n_max, v_read=v_read, seed=seed,
+                                   interpret=interpret, timer=timer,
+                                   refresh=True)
+        except ChipVerifyError as e:
+            if e.invariant != "vmem-budget":
+                raise
+            continue
+        timings[(bk, bn)] = sweeps[best_bm]
+    if not timings:
+        raise ChipVerifyError(
+            "pack", "vmem-budget",
+            f"every tiling candidate for layer '{layer}' "
+            f"({gd.shape[-2]}x{gd.shape[-1]}) busts the VMEM budget",
+            layer=layer)
+    winner = min(timings, key=timings.get)
+    _TILE_CACHE[key] = winner
+    return winner, timings
+
+
 def clear() -> None:
-    """Drop every cached winner (test isolation)."""
+    """Drop every cached winner, bm and tiling (test isolation)."""
     _CACHE.clear()
+    _TILE_CACHE.clear()

@@ -20,11 +20,12 @@ def data_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
-def serving_mesh_shape(max_model: int = 16) -> dict:
-    """{'data': D, 'model': M} factoring of the ACTUAL local device count —
-    what the serving driver hands to per-shard deployments (one CIM engine
-    per TP shard, models/nn.deploy_transformer_cim) instead of a hardcoded
-    {'model': 1}.
+def mesh_shape_for(n: int, max_model: int = 16) -> dict:
+    """{'data': D, 'model': M} factoring of an arbitrary device count —
+    the rule itself, detached from any jax device query so the
+    multi-process layer (launch/distributed.serving_mesh) can apply it to
+    a per-process LOCAL device count while this module keeps applying it
+    to the global one.
 
     Factoring rule (explicit, because it is easy to read past): the model
     axis takes the LARGEST POWER OF TWO that divides the device count,
@@ -38,11 +39,20 @@ def serving_mesh_shape(max_model: int = 16) -> dict:
     of two in every assigned arch) to divide the TP width — but callers
     who need TP must check `['model'] > 1`. A 1-device dev box yields
     {'data': 1, 'model': 1}."""
-    n = jax.device_count()
     m = 1
     while m * 2 <= min(n, max_model) and n % (m * 2) == 0:
         m *= 2
     return {"data": n // m, "model": m}
+
+
+def serving_mesh_shape(max_model: int = 16) -> dict:
+    """`mesh_shape_for` over the ACTUAL device count — what the serving
+    driver hands to per-shard deployments (one CIM engine per TP shard,
+    models/nn.deploy_transformer_cim) instead of a hardcoded {'model': 1}.
+    Single-process only: `jax.device_count()` counts EVERY process's
+    devices, so under `jax.distributed` a per-process mesh must come from
+    launch/distributed.serving_mesh (local devices) instead."""
+    return mesh_shape_for(jax.device_count(), max_model)
 
 
 def serving_mesh(max_model: int = 16):

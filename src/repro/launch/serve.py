@@ -58,6 +58,23 @@ and serves the whole chip at N-bit bit-serial input precision — the
 paper's Fig. 1d precision-reconfigurability as a serving knob (the arch
 config is the one source of truth: deploy and the serving jits derive the
 same CIMConfig from it via models/nn.arch_cim_config).
+
+Multi-process scale-out (launch/distributed): when this process was
+launched as part of a group (launch/env sets REPRO_COORDINATOR /
+REPRO_NUM_PROCESSES / REPRO_PROCESS_ID), main() joins it via
+jax.distributed BEFORE the first device query and every rank becomes one
+data-parallel replica: its own local (data, model) mesh
+(distributed.serving_mesh — never the global-device builder), its own
+compiled chip stack (deterministic from the shared seed), and in
+--traffic mode the deterministic request subset
+distributed.route_requests assigns it from the ONE seeded stream. No jit
+spans processes. Rank 0 owns the output files: per-rank summaries and
+rank-tagged metrics gather through the coordinator KV store, and rank 0
+writes the merged metrics/Prometheus/summary (obs.merge_registries —
+per-rank series stay distinct under their rank label). The
+one-decode-trace contract is asserted PER RANK before the gather.
+Launch: python -m repro.launch.env --procs 2 --host-devices 2 -- \
+    python -m repro.launch.serve --smoke --cim --traffic ...
 """
 from __future__ import annotations
 
@@ -92,14 +109,29 @@ def _add_obs_flags(ap):
                          "assertion: any steady-state retrace raises")
 
 
-def _write_obs(args, metrics, trace=None, summary=None):
-    """Flush whichever observability outputs were requested."""
-    if args.metrics_out:
-        metrics.write_json(args.metrics_out)
-        print(f"metrics: wrote {args.metrics_out}")
-    if args.prom_out:
-        metrics.write_prometheus(args.prom_out)
-        print(f"metrics: wrote {args.prom_out}")
+def _write_obs(args, metrics, trace=None, summary=None, extra_labels=None):
+    """Flush whichever observability outputs were requested. `metrics`
+    is a MetricsRegistry, or an already-merged `to_dict` document (the
+    multi-rank path: rank 0 holds the fleet's series, no live registry
+    exists for them)."""
+    if isinstance(metrics, dict):
+        from ..obs import dict_to_prometheus
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(metrics, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"metrics: wrote {args.metrics_out}")
+        if args.prom_out:
+            with open(args.prom_out, "w") as f:
+                f.write(dict_to_prometheus(metrics))
+            print(f"metrics: wrote {args.prom_out}")
+    else:
+        if args.metrics_out:
+            metrics.write_json(args.metrics_out, extra_labels)
+            print(f"metrics: wrote {args.metrics_out}")
+        if args.prom_out:
+            metrics.write_prometheus(args.prom_out, extra_labels)
+            print(f"metrics: wrote {args.prom_out}")
     if args.trace_out and trace is not None:
         trace.write(args.trace_out)
         print(f"trace: wrote {args.trace_out} ({len(trace.events)} events)")
@@ -157,6 +189,12 @@ def main(argv=None):
     _add_obs_flags(ap)
     args = ap.parse_args(argv)
 
+    # join the process group (if any) BEFORE the first device query —
+    # jax.distributed must initialize ahead of backend topology pinning
+    from . import distributed as dist
+    dist_on = dist.initialize()
+    rank, n_ranks = dist.process_info()
+
     cfg = configs.get(args.arch, smoke=args.smoke)
     cfg = cfg.replace(dtype=jnp.float32 if args.smoke else cfg.dtype)
     mesh = None
@@ -172,16 +210,28 @@ def main(argv=None):
             # served at this precision.
             cfg = cfg.replace(cim_in_bits=args.cim_bits)
         if args.cim_mesh == "auto":
-            from .mesh import serving_mesh
-            mesh = serving_mesh()
+            if dist_on:
+                # per-replica mesh over LOCAL devices: the global-device
+                # builder would span processes and make the pool
+                # non-addressable from the engine's host loop
+                mesh = dist.serving_mesh()
+            else:
+                from .mesh import serving_mesh
+                mesh = serving_mesh()
         elif args.cim_mesh != "off":
             import re
             m_ = re.fullmatch(r"(\d+)x(\d+)", args.cim_mesh)
             if not m_:
                 ap.error(f"--cim-mesh must be 'auto', 'off' or 'DxM' "
                          f"(e.g. '1x8'), got {args.cim_mesh!r}")
-            mesh = jax.make_mesh((int(m_.group(1)), int(m_.group(2))),
-                                 ("data", "model"))
+            shape = (int(m_.group(1)), int(m_.group(2)))
+            if dist_on:
+                import numpy as np
+                from jax.sharding import Mesh
+                mesh = Mesh(np.array(jax.local_devices()).reshape(shape),
+                            ("data", "model"))
+            else:
+                mesh = jax.make_mesh(shape, ("data", "model"))
         if mesh is not None:
             # the prefill/decode jits close over cfg — and so over the mesh
             cfg = cfg.replace(cim_mesh=mesh)
@@ -191,10 +241,18 @@ def main(argv=None):
     if args.cim:
         from ..core.types import CoreSpec
         from .mesh import serving_mesh_shape
-        # 'off' still derives the TP width from the local device count;
-        # with a real mesh the deploy derives it from the mesh itself
-        # (models/nn._resolve_mesh) so width and placement cannot disagree
-        mesh_shape = serving_mesh_shape() if mesh is None else None
+        # 'off' still derives the TP width from the local device count
+        # (per-process under jax.distributed — device_count() would span
+        # the whole group); with a real mesh the deploy derives it from
+        # the mesh itself (models/nn._resolve_mesh) so width and
+        # placement cannot disagree
+        if mesh is not None:
+            mesh_shape = None
+        elif dist_on:
+            from .mesh import mesh_shape_for
+            mesh_shape = mesh_shape_for(len(jax.local_devices()))
+        else:
+            mesh_shape = serving_mesh_shape()
         spec = CoreSpec(n_cores=args.cim_cores) if args.cim_cores else None
         from ..core.verify import verify_deployed
         with stopwatch() as sw:
@@ -210,13 +268,15 @@ def main(argv=None):
                   if n_shared else "")
         exec_mode = ("shard_map" if mesh is not None and tp > 1
                      else "unrolled")
-        print(f"cim: compiled {n_packed} projection stacks "
+        rtag = f"[rank {rank}/{n_ranks}] " if dist_on else ""
+        print(f"{rtag}cim: compiled {n_packed} projection stacks "
               f"x {cfg.n_layers} layers{shared} ({args.cim_mode}, "
               f"bits={cfg.cim_in_bits}/{cfg.cim_out_bits}, "
               f"tp={tp}, exec={exec_mode}) "
               f"in {sw.s:.1f}s")
     if args.traffic:
-        return _serve_traffic(args, cfg, params, mesh)
+        return _serve_traffic(args, cfg, params, mesh,
+                              rank=rank, n_ranks=n_ranks)
 
     max_len = args.prompt_len + args.gen + (cfg.vis_patches or 0)
     cache = sv.init_state(args.batch, max_len)
@@ -276,6 +336,8 @@ def main(argv=None):
     t_decode = (sum(step_lat) / len(step_lat)) if step_lat else 0.0
     out = jnp.concatenate(generated, axis=1)
     tag = " cim=packed" if args.cim else ""
+    if dist_on:
+        tag += f" rank={rank}/{n_ranks}"
     thr = (args.batch / t_decode) if t_decode else float("nan")
     print(f"arch={cfg.name}{tag} batch={args.batch} "
           f"prefill={t_prefill*1e3:.1f}ms "
@@ -301,16 +363,30 @@ def main(argv=None):
         "pj_per_token": energy_pj / n_tok if n_tok else 0.0,
         "sample_tokens": out[0, :16].tolist(),
     }
-    _write_obs(args, metrics, summary=summary)
+    if dist_on:
+        # static mode replicates the identical batch per rank (a group
+        # smoke, not a routed workload); rank 0 owns the output files
+        summary.update({"rank": rank, "ranks": n_ranks})
+        if rank == 0:
+            _write_obs(args, metrics, summary=summary,
+                       extra_labels={"rank": str(rank)})
+    else:
+        _write_obs(args, metrics, summary=summary)
     return out
 
 
-def _serve_traffic(args, cfg, params, mesh=None):
+def _serve_traffic(args, cfg, params, mesh=None, rank=0, n_ranks=1):
     """Continuous-batching mode: open-loop Poisson traffic through the
     slotted pool (launch/scheduler.ContinuousBatchingEngine). On a real
     mesh the pool itself is placed per distributed/sharding.pool_pspecs
     (slot dim over 'data') so every engine jit sees stable shardings —
-    required for the one-decode-trace contract."""
+    required for the one-decode-trace contract.
+
+    Multi-process (n_ranks > 1): the SAME seeded stream is built on
+    every rank and distributed.route_requests carves out this replica's
+    share; the one-decode-trace contract is asserted per rank; rank 0
+    gathers every rank's summary + rank-tagged metrics over the
+    coordinator KV store and writes the merged outputs."""
     import numpy as np
     from ..data import traffic_requests
     from .scheduler import ContinuousBatchingEngine, Request
@@ -333,6 +409,10 @@ def _serve_traffic(args, cfg, params, mesh=None):
     reqs = [Request(rid=i, prompt=toks[i, :lens[i]],
                     max_new=int(tr.gen[i]), arrival=float(tr.arrivals[i]))
             for i in range(args.requests)]
+    dist_on = n_ranks > 1
+    if dist_on:
+        from .distributed import route_requests
+        reqs = route_requests(reqs, n_ranks, rank)
     metrics = MetricsRegistry()
     trace = TraceBuffer() if args.trace_out else None
     eng = ContinuousBatchingEngine(cfg, params, n_slots=slots,
@@ -340,10 +420,13 @@ def _serve_traffic(args, cfg, params, mesh=None):
                                    mesh=mesh, metrics=metrics, trace=trace,
                                    strict_jit=args.strict_jit)
     stats = eng.run(reqs)
+    # per-rank, BEFORE any gather: a retracing replica must fail its own
+    # process, not hide inside the fleet aggregate
     assert stats["decode_traces"] == 1, \
         f"decode retraced across occupancy changes: {stats['decode_traces']}"
     tag = " cim=packed" if args.cim else ""
-    print(f"arch={cfg.name}{tag} traffic: {stats['requests']} reqs "
+    rtag = f"[rank {rank}/{n_ranks}] " if dist_on else ""
+    print(f"{rtag}arch={cfg.name}{tag} traffic: {stats['requests']} reqs "
           f"slots={slots} chunk={args.chunk} rate={args.rate}/s -> "
           f"{stats['tokens']} tokens in {stats['wall_s']:.2f}s "
           f"({stats['tok_per_s']:.1f} tok/s) "
@@ -351,7 +434,7 @@ def _serve_traffic(args, cfg, params, mesh=None):
           f"ttft_p50={stats['ttft_p50_ms']:.1f}ms "
           f"decode_traces={stats['decode_traces']}")
     if stats["energy_pj"] > 0:
-        print(f"chip energy: {stats['energy_pj']/1e6:.2f} uJ "
+        print(f"{rtag}chip energy: {stats['energy_pj']/1e6:.2f} uJ "
               f"({stats['pj_per_token']/1e3:.1f} nJ/token, "
               f"{stats['tops_per_w']:.2f} TOPS/W, "
               f"utilization={stats['utilization']:.2f})")
@@ -359,7 +442,33 @@ def _serve_traffic(args, cfg, params, mesh=None):
     summary.update({"mode": "traffic", "arch": cfg.name,
                     "cim": bool(args.cim), "slots": slots,
                     "chunk": args.chunk, "rate": args.rate})
-    _write_obs(args, metrics, trace=trace, summary=summary)
+    if not dist_on:
+        _write_obs(args, metrics, trace=trace, summary=summary)
+        return stats
+
+    # ---- rank-0 reporting contract: gather, merge, write once
+    from ..obs import merge_registries
+    from .distributed import gather_json, global_mesh_shape, merge_summaries
+    summary.update({"rank": rank, "ranks": n_ranks})
+    docs = gather_json("serve_traffic", {
+        "summary": summary,
+        "metrics": metrics.to_dict(extra_labels={"rank": str(rank)})})
+    if rank != 0:
+        return stats
+    merged = merge_summaries([d["summary"] for d in docs])
+    merged.update({"mode": "traffic", "arch": cfg.name,
+                   "cim": bool(args.cim), "slots": slots,
+                   "chunk": args.chunk, "rate": args.rate,
+                   "mesh_shape": global_mesh_shape(),
+                   "routing": "round_robin"})
+    print(f"fleet[{n_ranks} replicas]: {merged['requests']} reqs -> "
+          f"{merged['tokens']} tokens, aggregate "
+          f"{merged['tok_per_s']:.1f} tok/s "
+          f"(slowest replica wall {merged['wall_s']:.2f}s), "
+          f"p99={merged['p99_ms']:.1f}ms, "
+          f"decode_traces(max)={merged['decode_traces']}")
+    _write_obs(args, merge_registries([d["metrics"] for d in docs]),
+               trace=trace, summary=merged)
     return stats
 
 

@@ -34,5 +34,6 @@ its measurements are what feed the metrics histograms.
 from . import clock  # noqa: F401
 from .chipmeter import ChipMeter  # noqa: F401
 from .jitwatch import JitRetraceError, JitWatcher  # noqa: F401
-from .metrics import MetricsRegistry  # noqa: F401
+from .metrics import (MetricsRegistry, dict_to_prometheus,  # noqa: F401
+                      merge_registries)
 from .trace import TraceBuffer  # noqa: F401

@@ -27,6 +27,15 @@ tools/check_obs.py):
 None (JSON has no +Inf). `to_prometheus` renders the same data in the
 Prometheus text exposition format (histograms as `_bucket`/`_sum`/
 `_count` with an explicit `+Inf` bucket).
+
+Multi-process runs: every export entry point takes `extra_labels`
+(serve passes {"rank": str(process_index)}), stamped onto EVERY series
+at export time — instruments stay rank-unaware, the engine records
+exactly as in single-process serving. Rank 0 merges the per-rank
+exported docs with `merge_registries` (series identity collision =
+double-counting = error) and `dict_to_prometheus` renders a merged doc
+without rebuilding a registry. Single-process exports carry no rank
+label, so existing dashboards/validators see unchanged output.
 """
 from __future__ import annotations
 
@@ -217,7 +226,9 @@ class MetricsRegistry:
 
     # ------------------------------------------------------------- export
 
-    def to_dict(self) -> dict:
+    def to_dict(self, extra_labels: Optional[Dict[str, str]] = None
+                ) -> dict:
+        extra = _check_extra(extra_labels)
         out = {"counters": [], "gauges": [], "histograms": []}
         for name in sorted(self._metrics):
             m = self._metrics[name]
@@ -229,7 +240,7 @@ class MetricsRegistry:
                         le = m.bounds[i] if i < len(m.bounds) else None
                         buckets.append([le, cum])
                     out["histograms"].append({
-                        "name": m.name, "labels": dict(key),
+                        "name": m.name, "labels": _merge_labels(key, extra),
                         "count": s.count, "sum": s.sum,
                         "min": None if s.count == 0 else s.min,
                         "max": None if s.count == 0 else s.max,
@@ -238,16 +249,20 @@ class MetricsRegistry:
                 dest = out["counters"] if isinstance(m, Counter) \
                     else out["gauges"]
                 for key, v in m.series():
-                    dest.append({"name": m.name, "labels": dict(key),
+                    dest.append({"name": m.name,
+                                 "labels": _merge_labels(key, extra),
                                  "value": v})
         return out
 
-    def to_json(self, **json_kw) -> str:
+    def to_json(self, extra_labels: Optional[Dict[str, str]] = None,
+                **json_kw) -> str:
         json_kw.setdefault("indent", 2)
         json_kw.setdefault("sort_keys", True)
-        return json.dumps(self.to_dict(), **json_kw)
+        return json.dumps(self.to_dict(extra_labels), **json_kw)
 
-    def to_prometheus(self) -> str:
+    def to_prometheus(self, extra_labels: Optional[Dict[str, str]] = None
+                      ) -> str:
+        extra = _check_extra(extra_labels)
         lines: List[str] = []
         for name in sorted(self._metrics):
             m = self._metrics[name]
@@ -256,6 +271,7 @@ class MetricsRegistry:
             lines.append(f"# TYPE {m.name} {m.kind}")
             if isinstance(m, Histogram):
                 for key, s in m.series():
+                    key = _label_key(_merge_labels(key, extra))
                     cum = 0
                     for i, c in enumerate(s.counts):
                         cum += c
@@ -269,14 +285,98 @@ class MetricsRegistry:
                         f"{m.name}_count{_label_str(key)} {s.count}")
             else:
                 for key, v in m.series():
+                    key = _label_key(_merge_labels(key, extra))
                     lines.append(f"{m.name}{_label_str(key)} {v}")
         return "\n".join(lines) + "\n"
 
-    def write_json(self, path: str) -> None:
+    def write_json(self, path: str,
+                   extra_labels: Optional[Dict[str, str]] = None) -> None:
         with open(path, "w") as f:
-            f.write(self.to_json())
+            f.write(self.to_json(extra_labels))
             f.write("\n")
 
-    def write_prometheus(self, path: str) -> None:
+    def write_prometheus(self, path: str,
+                         extra_labels: Optional[Dict[str, str]] = None
+                         ) -> None:
         with open(path, "w") as f:
-            f.write(self.to_prometheus())
+            f.write(self.to_prometheus(extra_labels))
+
+
+# -------------------------------------------------- multi-process merge
+
+def _check_extra(extra: Optional[Dict[str, str]]) -> Dict[str, str]:
+    return {str(k): str(v) for k, v in (extra or {}).items()}
+
+
+def _merge_labels(key: LabelKey, extra: Dict[str, str]) -> Dict[str, str]:
+    base = dict(key)
+    clash = set(base) & set(extra)
+    if clash:
+        raise ValueError(f"extra label(s) {sorted(clash)} collide with "
+                         "instrument labels — a rank tag must not "
+                         "overwrite a recorded dimension")
+    base.update(extra)
+    return base
+
+
+def merge_registries(docs: Sequence[dict]) -> dict:
+    """Merge exported `to_dict` documents (one per rank) into one doc.
+
+    Series identity is (kind, name, labels); an identity appearing in two
+    documents raises — that is the double-counting bug this helper exists
+    to prevent (two ranks exporting the same un-tagged series would sum
+    on any dashboard). Tag each doc at export time
+    (`to_dict(extra_labels={"rank": ...})`) and the identities are
+    disjoint by construction. Output series are sorted by (name, labels)
+    so the merged file is deterministic across gather orders."""
+    out = {"counters": [], "gauges": [], "histograms": []}
+    seen = set()
+    for doc in docs:
+        for kind in ("counters", "gauges", "histograms"):
+            for e in doc[kind]:
+                ident = (kind, e["name"], _label_key(e["labels"]))
+                if ident in seen:
+                    raise ValueError(
+                        f"duplicate series in merge: {kind[:-1]} "
+                        f"{e['name']}{_label_str(_label_key(e['labels']))}"
+                        " — export each rank with a distinct rank label")
+                seen.add(ident)
+                out[kind].append(e)
+    for kind in out:
+        out[kind].sort(key=lambda e: (e["name"],
+                                      _label_key(e["labels"])))
+    return out
+
+
+def dict_to_prometheus(doc: dict) -> str:
+    """Render a `to_dict`-shaped document (typically `merge_registries`
+    output — no live registry exists for it) in the Prometheus text
+    format. Emits one # TYPE per family, exactly like `to_prometheus`
+    (help strings are registry state and don't survive the JSON round
+    trip, so none are emitted)."""
+    lines: List[str] = []
+    typed = set()
+
+    def _type(name: str, kind: str) -> None:
+        if name not in typed:
+            typed.add(name)
+            lines.append(f"# TYPE {name} {kind}")
+
+    for e in sorted(doc["counters"] + doc["gauges"],
+                    key=lambda e: (e["name"], _label_key(e["labels"]))):
+        kind = "counter" if any(e is c for c in doc["counters"]) \
+            else "gauge"
+        _type(e["name"], kind)
+        lines.append(f"{e['name']}{_label_str(_label_key(e['labels']))} "
+                     f"{e['value']}")
+    for h in sorted(doc["histograms"],
+                    key=lambda e: (e["name"], _label_key(e["labels"]))):
+        _type(h["name"], "histogram")
+        key = _label_key(h["labels"])
+        for le, cum in h["buckets"]:
+            lk = _label_str(key + (("le",
+                                    "+Inf" if le is None else repr(le)),))
+            lines.append(f"{h['name']}_bucket{lk} {cum}")
+        lines.append(f"{h['name']}_sum{_label_str(key)} {h['sum']}")
+        lines.append(f"{h['name']}_count{_label_str(key)} {h['count']}")
+    return "\n".join(lines) + "\n"

@@ -1,0 +1,81 @@
+"""Child process for the 2-process replication parity test in
+tests/test_distributed.py.
+
+Serves one SEEDED request stream through a ContinuousBatchingEngine over
+a packed CIM chip stack. When launched inside a jax.distributed group
+(the REPRO_* vars from launch/env are set), it joins the group and
+serves only the subset launch/distributed.route_requests assigns its
+rank; launched solo it serves everything — the single-process reference.
+
+Replication parity contract (asserted by the parent): every request's
+greedy tokens AND per-token logits rows must be BITWISE identical
+whichever shape served it — a replica is the same chip, and routing must
+not perturb the numerics. Logits travel as an md5 over the concatenated
+raw bytes; token lists travel verbatim. Prints ONE json dict on the last
+stdout line:
+
+    {"rank", "n_ranks", "grouped", "decode_traces",
+     "results": {rid: {"tokens": [...], "logits_md5": "..."}}}
+"""
+import hashlib
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import traffic_requests
+from repro.launch import distributed as dist
+from repro.launch.scheduler import ContinuousBatchingEngine, Request
+
+N_REQUESTS = 6
+CHUNK = 16
+MAX_PROMPT = 48
+MAX_GEN = 6
+
+
+def build_requests(cfg):
+    tr = traffic_requests(jax.random.PRNGKey(1), N_REQUESTS, cfg.vocab,
+                          min_len=CHUNK, max_len=MAX_PROMPT, page=CHUNK,
+                          rate=100.0, min_gen=2, max_gen=MAX_GEN)
+    toks, lens = np.asarray(tr.tokens), np.asarray(tr.lengths)
+    return [Request(rid=i, prompt=toks[i, :lens[i]],
+                    max_new=int(tr.gen[i]), arrival=float(tr.arrivals[i]))
+            for i in range(N_REQUESTS)]
+
+
+def main():
+    grouped = dist.initialize()
+    rank, n_ranks = dist.process_info()
+
+    cfg = configs.get("gemma2-9b", smoke=True).replace(
+        dtype=jnp.float32, cim_mode="packed")
+    from repro.launch.steps import arch_serving
+    sv = arch_serving(cfg)
+    params = sv.init_params(jax.random.PRNGKey(0))
+    params = sv.deploy_cim(jax.random.PRNGKey(7), params, mode="ideal",
+                           mesh_shape={"model": 1})
+
+    reqs = build_requests(cfg)
+    mine = dist.route_requests(reqs, n_ranks, rank) if n_ranks > 1 else reqs
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2,
+                                   max_len=MAX_PROMPT + MAX_GEN,
+                                   chunk=CHUNK, capture_logits=True)
+    stats = eng.run(mine, realtime=False)
+
+    results = {}
+    for r in mine:
+        h = hashlib.md5()
+        for row in r.logits:
+            h.update(np.ascontiguousarray(row).tobytes())
+        results[str(r.rid)] = {"tokens": [int(t) for t in r.tokens],
+                               "logits_md5": h.hexdigest()}
+    print(json.dumps({
+        "rank": rank, "n_ranks": n_ranks, "grouped": grouped,
+        "decode_traces": stats["decode_traces"], "results": results}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,13 @@
-"""Distribution substrate: sharding rules, checkpointing, fault tolerance."""
+"""Distribution substrate: sharding rules, checkpointing, fault
+tolerance — plus the multi-host scale-out layer (launch/env runtime
+config, launch/distributed routing + rank-0 aggregation, and the
+2-process replication parity subprocess test)."""
+import json
 import os
+import pathlib
+import subprocess
+import sys
+import types
 
 import jax
 import jax.numpy as jnp
@@ -155,3 +163,154 @@ def test_elastic_reshard_roundtrip(tmp_path):
     np.testing.assert_array_equal(np.asarray(restored["w"]),
                                   np.asarray(tree["w"]))
     assert restored["w"].sharding == sh["w"]
+
+
+# ------------------------------------------------- scale-out: launch/env
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_xla_flags_replaces_forcing_flag():
+    from repro.launch import env as lenv
+    # appends to existing flags, replaces (never duplicates) the forcing
+    out = lenv.xla_flags(4, base="--xla_foo=1 "
+                         "--xla_force_host_platform_device_count=8")
+    assert out.split() == ["--xla_foo=1",
+                           "--xla_force_host_platform_device_count=4"]
+    assert lenv.xla_flags(None, base="--xla_foo=1") == "--xla_foo=1"
+
+
+def test_runtime_env_group_vars_roundtrip():
+    from repro.launch import env as lenv
+    e = lenv.runtime_env(num_processes=2, process_id=1,
+                         coordinator="localhost:5000", host_devices=2,
+                         base={})
+    assert lenv.from_env(e) == ("localhost:5000", 2, 1)
+    assert "--xla_force_host_platform_device_count=2" in e["XLA_FLAGS"]
+    # solo ranks STRIP inherited group vars (cannot re-join by accident)
+    solo = lenv.runtime_env(base=e)
+    assert lenv.from_env(solo) is None
+    with pytest.raises(ValueError):
+        lenv.runtime_env(num_processes=2, process_id=2, base={})
+
+
+def test_from_env_partial_set_raises():
+    from repro.launch import env as lenv
+    assert lenv.from_env({}) is None
+    with pytest.raises(RuntimeError):
+        lenv.from_env({lenv.ENV_COORDINATOR: "localhost:1"})
+    with pytest.raises(RuntimeError):
+        lenv.from_env({lenv.ENV_COORDINATOR: "c", lenv.ENV_NUM_PROCESSES:
+                       "2", lenv.ENV_PROCESS_ID: "2"})   # pid out of range
+
+
+# ----------------------------------------- scale-out: routing + merging
+
+def _fake_reqs(n):
+    return [types.SimpleNamespace(rid=i) for i in range(n)]
+
+
+def test_route_requests_partitions_stream():
+    """Each policy's per-rank subsets partition the stream exactly —
+    every request served once, by exactly one replica."""
+    from repro.launch.distributed import route_requests
+    reqs = _fake_reqs(11)
+    for policy in ("round_robin", "hash"):
+        for n in (1, 2, 3):
+            rids = [r.rid for rep in range(n)
+                    for r in route_requests(reqs, n, rep, policy=policy)]
+            assert sorted(rids) == list(range(11)), (policy, n)
+    # round-robin balances every window of n requests
+    sizes = [len(route_requests(_fake_reqs(12), 3, rep))
+             for rep in range(3)]
+    assert sizes == [4, 4, 4]
+    # deterministic: same inputs, same subset
+    a = route_requests(reqs, 2, 1, policy="hash")
+    b = route_requests(reqs, 2, 1, policy="hash")
+    assert [r.rid for r in a] == [r.rid for r in b]
+    with pytest.raises(ValueError):
+        route_requests(reqs, 2, 2)
+    with pytest.raises(ValueError):
+        route_requests(reqs, 2, 0, policy="lru")
+
+
+def test_merge_summaries_aggregates():
+    from repro.launch.distributed import merge_summaries
+    s0 = {"requests": 4, "tokens": 30, "wall_s": 2.0, "tok_per_s": 15.0,
+          "p50_ms": 1.0, "p99_ms": 5.0, "ttft_p50_ms": 10.0,
+          "decode_traces": 1, "mvm_dispatches": 100, "energy_pj": 300.0,
+          "utilization": 0.5, "tops_per_w": 2.0}
+    s1 = {"requests": 6, "tokens": 10, "wall_s": 4.0, "tok_per_s": 2.5,
+          "p50_ms": 3.0, "p99_ms": 4.0, "ttft_p50_ms": 20.0,
+          "decode_traces": 1, "mvm_dispatches": 300, "energy_pj": 100.0,
+          "utilization": 0.9, "tops_per_w": 4.0}
+    m = merge_summaries([s0, s1])
+    assert m["ranks"] == 2 and m["requests"] == 10 and m["tokens"] == 40
+    assert m["wall_s"] == 4.0                  # slowest rank IS the fleet
+    assert m["tok_per_s"] == pytest.approx(40 / 4.0)
+    assert m["p50_ms"] == pytest.approx((1.0 * 30 + 3.0 * 10) / 40)
+    assert m["p99_ms"] == 5.0                  # conservative tail: max
+    assert m["decode_traces"] == 1
+    assert m["energy_pj"] == 400.0
+    assert m["pj_per_token"] == pytest.approx(400.0 / 40)
+    assert m["utilization"] == pytest.approx((0.5 * 100 + 0.9 * 300) / 400)
+    assert m["tops_per_w"] == pytest.approx((2.0 * 300 + 4.0 * 100) / 400)
+    assert len(m["per_rank"]) == 2
+    with pytest.raises(ValueError):
+        merge_summaries([])
+
+
+def test_global_mesh_shape_single_process():
+    """Outside any group the fleet shape IS the local shape."""
+    from repro.launch.distributed import global_mesh_shape, serving_mesh
+    g = global_mesh_shape()
+    local = dict(serving_mesh().shape)
+    assert g == local
+    assert g["data"] * g["model"] == len(jax.local_devices())
+
+
+# ------------------------------- scale-out: 2-process replication parity
+
+def _spawn_child(num_processes):
+    from repro.launch import env as lenv
+    extra = {"PYTHONPATH": str(REPO / "src") + (
+        os.pathsep + os.environ["PYTHONPATH"]
+        if os.environ.get("PYTHONPATH") else "")}
+    results = lenv.launch(
+        [sys.executable, str(REPO / "tests" / "_distributed_child.py")],
+        num_processes=num_processes, host_devices=1, timeout=1200,
+        extra_env=extra)
+    out = []
+    for rank, r in enumerate(results):
+        assert r.returncode == 0, (rank, (r.stderr or "")[-4000:])
+        out.append(json.loads(r.stdout.strip().splitlines()[-1]))
+    return out
+
+
+@pytest.mark.slow
+def test_two_process_replica_parity():
+    """A request served by a 2-process replicated fleet is BITWISE the
+    request served by one process: same greedy tokens, same logits bytes
+    (md5), because a replica is the same compiled chip and routing must
+    not perturb numerics. Also pins the routed rid partition and the
+    per-rank one-decode-trace contract — asserted inside each child
+    before it reports."""
+    from repro.launch.distributed import route_requests
+    (ref,) = _spawn_child(1)
+    assert ref["n_ranks"] == 1 and not ref["grouped"]
+    assert ref["decode_traces"] == 1
+    n_req = len(ref["results"])
+
+    ranks = _spawn_child(2)
+    assert [d["rank"] for d in ranks] == [0, 1]
+    for d in ranks:
+        assert d["grouped"] and d["n_ranks"] == 2
+        assert d["decode_traces"] == 1     # per-rank contract held
+        want = [r.rid for r in
+                route_requests(_fake_reqs(n_req), 2, d["rank"])]
+        assert sorted(int(k) for k in d["results"]) == want
+        for rid, res in d["results"].items():
+            assert res["tokens"] == ref["results"][rid]["tokens"], rid
+            assert res["logits_md5"] == ref["results"][rid]["logits_md5"], rid
+    served = sorted(int(k) for d in ranks for k in d["results"])
+    assert served == list(range(n_req))    # partition: exactly once each

@@ -289,3 +289,67 @@ def test_metrics_do_not_perturb_tokens():
 
     for r0, r1 in zip(bare, metered):
         assert r0.tokens == r1.tokens, f"request {r0.rid} diverged"
+
+
+# ------------------------------------------- multi-process export/merge
+
+def test_export_extra_labels_stamp_every_series():
+    """extra_labels (serve's {"rank": N}) land on every exported series
+    in both formats; instruments stay rank-unaware; a collision with an
+    instrument's own label raises instead of silently relabeling."""
+    reg = MetricsRegistry()
+    reg.counter("serve_tokens").inc(3, slot="0")
+    reg.gauge("pool_occupancy").set(2.0)
+    reg.histogram("token_ms").observe(1e-3)
+    doc = reg.to_dict(extra_labels={"rank": "1"})
+    for fam in ("counters", "gauges", "histograms"):
+        for s in doc[fam]:
+            assert s["labels"]["rank"] == "1", (fam, s)
+    assert doc["counters"][0]["labels"]["slot"] == "0"  # own labels kept
+    assert 'rank="1"' in reg.to_prometheus(extra_labels={"rank": "1"})
+    # no extra_labels -> byte-identical single-process export
+    assert reg.to_dict() == reg.to_dict(extra_labels=None)
+    with pytest.raises(ValueError):
+        reg.to_dict(extra_labels={"slot": "9"})
+
+
+def test_merge_registries_and_collision():
+    """Rank-labeled docs merge into one; the SAME series identity
+    appearing twice is double-counting and must raise."""
+    from repro.obs import merge_registries
+    docs = []
+    for rank in range(2):
+        reg = MetricsRegistry()
+        reg.counter("serve_tokens").inc(10 * (rank + 1))
+        reg.histogram("token_ms").observe(1e-3 * (rank + 1))
+        docs.append(reg.to_dict(extra_labels={"rank": str(rank)}))
+    m = merge_registries(docs)
+    assert len(m["counters"]) == 2
+    ranks = sorted(s["labels"]["rank"] for s in m["counters"])
+    assert ranks == ["0", "1"]
+    assert sum(s["value"] for s in m["counters"]) == 30
+    assert len(m["histograms"]) == 2
+    # unlabeled duplicate identity: double-counting
+    reg = MetricsRegistry()
+    reg.counter("serve_tokens").inc(1)
+    with pytest.raises(ValueError):
+        merge_registries([reg.to_dict(), reg.to_dict()])
+
+
+def test_dict_to_prometheus_renders_merged_doc():
+    from repro.obs import dict_to_prometheus, merge_registries
+    docs = []
+    for rank in range(2):
+        reg = MetricsRegistry()
+        reg.counter("serve_tokens").inc(5)
+        reg.histogram("token_ms").observe(2e-3)
+        docs.append(reg.to_dict(extra_labels={"rank": str(rank)}))
+    text = dict_to_prometheus(merge_registries(docs))
+    assert text.count("# TYPE serve_tokens counter") == 1   # one per family
+    assert text.count("# TYPE token_ms histogram") == 1
+    assert 'serve_tokens{rank="0"} 5' in text
+    assert 'serve_tokens{rank="1"} 5' in text
+    assert 'le="+Inf"' in text
+    for rank in range(2):
+        assert f'token_ms_count{{rank="{rank}"}} 1' in text
+        assert f'token_ms_sum{{rank="{rank}"}} 0.002' in text

@@ -189,6 +189,81 @@ def test_autotune_caches_winner_and_serving_picks_it_up():
     assert autotune.lookup(packed, 64, cfg.activation) == 256
 
 
+# ------------------------------------------------- plan-time re-tiling
+
+def test_tiling_candidates_caps_dedup_core_budget():
+    """Candidates are halvings of the physical caps, clamped to the
+    layer, deduplicated, and pruned to fit the chip's core count — with
+    the planner's own (coarsest) geometry always surviving as first."""
+    cands = autotune.tiling_candidates(300, 500)
+    assert cands[0] == (128, 256)          # the planner default leads
+    assert len(set(cands)) == len(cands)   # deduplicated
+    for bk, bn in cands:
+        assert bk <= 128 and bn <= 256
+        n_tiles = -(-300 // bk) * (-(-500 // bn))
+        assert n_tiles <= CoreSpec().n_cores
+    # a tiny layer (under every halving) collapses to one clamped candidate
+    assert autotune.tiling_candidates(30, 60) == ((30, 60),)
+    # a 3-core chip can only plan the coarsest geometry for this layer
+    assert autotune.tiling_candidates(
+        300, 500, CoreSpec(n_cores=3)) == ((128, 256),)
+
+
+def test_retile_matches_loop_oracle_bitwise():
+    """A retiled plan is the uniform grid at explicit caps: for every
+    candidate geometry the packed execution must equal the per-tile loop
+    oracle over the SAME grid, bitwise (it is a different quantization
+    partition from other geometries — never compare across candidates)."""
+    from repro.core.mapping import Tile
+    cfg, cond, x = _case(4, 300, 500, seed=17)
+    gd, gs = cond.g_pos - cond.g_neg, cond.g_pos + cond.g_neg
+    for bk, bn in ((128, 256), (64, 128)):
+        packed = autotune.retile(gd, bk, bn, gsum=gs, v_decr=0.002)
+        tiles = [Tile("layer", i * bk, j * bn,
+                      min(bk, 300 - i * bk), min(bn, 500 - j * bn))
+                 for i in range(-(-300 // bk)) for j in range(-(-500 // bn))]
+        y_packed = multicore_mvm_packed(x, packed, cfg)
+        y_loop = _loop_counts(x, cond, tiles, 0.002, cfg)
+        np.testing.assert_array_equal(np.asarray(y_packed),
+                                      np.asarray(y_loop), err_msg=f"{bk}x{bn}")
+    with pytest.raises(ValueError):
+        autotune.retile(gd, 512, 256)      # caps outside the layer
+
+
+def test_tune_tiling_caches_winner_per_layer_signature():
+    autotune.clear()
+    cfg, cond, _ = _case(4, 100, 120, seed=19, b=8)
+    gd, gs = cond.g_pos - cond.g_neg, cond.g_pos + cond.g_neg
+    x = jax.random.randint(jax.random.PRNGKey(23), (8, 100),
+                           -7, 8).astype(jnp.float32)
+    assert autotune.lookup_tiling(100, 120, 8, cfg.activation) is None
+    n_cands = len(autotune.tiling_candidates(100, 120))
+    # injected deterministic timer: strictly decreasing, so the LAST
+    # candidate wins (batch of 8 -> exactly one bm per candidate)
+    fake = iter(range(n_cands, 0, -1))
+
+    def timer(thunk):
+        thunk()                    # the sweep really executes each re-pack
+        return float(next(fake))
+
+    winner, timings = autotune.tune_tiling(
+        x, gd, gsum=gs, v_decr=0.002, activation=cfg.activation,
+        n_max=cfg.out_mag_levels, v_read=cfg.v_read, timer=timer)
+    cands = autotune.tiling_candidates(100, 120)
+    assert winner == cands[-1] and set(timings) == set(cands)
+    # cached: same signature (and batch bucket) hits without re-measuring
+    assert autotune.lookup_tiling(100, 120, 8, cfg.activation) == winner
+    assert autotune.lookup_tiling(100, 120, 5, cfg.activation) == winner
+    assert autotune.tune_tiling(
+        x, gd, gsum=gs, v_decr=0.002, activation=cfg.activation,
+        n_max=cfg.out_mag_levels, v_read=cfg.v_read) == (winner, {})
+    # a different epilogue is a different chip -> separate cache line
+    assert autotune.lookup_tiling(100, 120, 8, "relu",
+                                  fold_norm=True) is None
+    autotune.clear()
+    assert autotune.lookup_tiling(100, 120, 8, cfg.activation) is None
+
+
 # --------------------------------------- precision knob: config plumbing
 
 def test_cim_config_rejects_out_of_range_bits():

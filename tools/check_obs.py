@@ -15,8 +15,11 @@ round trip an external dashboard would do:
      "X" span carries its exact seconds in args.dur_s.
   3. Serving invariants: the one-decode-trace contract
      (jit_traces{entry="pool_decode"} == 1 — the PR 7 retrace bug class,
-     lint R001's runtime twin) and exact chip-energy reconciliation —
-     for every {chip, direction} series,
+     lint R001's runtime twin; on a merged multi-rank export the check
+     holds PER rank-labeled series, and --expect-ranks N requires ranks
+     0..N-1 all present) and exact chip-energy reconciliation — for
+     every labeled series ({chip, direction}, plus {rank} on merged
+     multi-process exports),
      chip_energy_pj == chip_pj_per_mvm * chip_mvm_dispatches with no
      float drift (the meter stores integer dispatch counts and takes one
      product at export; see obs/chipmeter).
@@ -24,7 +27,7 @@ round trip an external dashboard would do:
 Usage (exits non-zero on the first violated check):
 
     python tools/check_obs.py --metrics M.json [--trace T.json]
-        [--no-decode-contract]
+        [--no-decode-contract] [--expect-ranks N]
 """
 from __future__ import annotations
 
@@ -102,15 +105,30 @@ def _series(doc: dict, kind: str, name: str) -> dict:
             for e in doc[kind] if e["name"] == name}
 
 
-def check_decode_contract(doc: dict) -> None:
+def check_decode_contract(doc: dict, expect_ranks: int = 0) -> None:
+    """Every jit_traces series tagged entry=pool_decode must equal 1 —
+    PER RANK: a merged multi-rank export (obs.metrics.merge_registries)
+    carries one such series per rank label, and each one is the
+    one-decode-trace contract for that replica. expect_ranks > 0
+    additionally requires the rank labels 0..N-1 to all be present (a
+    dropped rank's metrics would otherwise vanish silently from the
+    merge)."""
     traces = _series(doc, "gauges", "jit_traces")
-    key = (("entry", "pool_decode"),)
-    _require(key in traces,
+    decode = {lab: v for lab, v in traces.items()
+              if ("entry", "pool_decode") in lab}
+    _require(bool(decode),
              "metrics: no jit_traces{entry=\"pool_decode\"} series — was "
              "the engine's jitwatch exported?")
-    _require(traces[key] == 1,
-             f"one-decode-trace contract broken: jit_traces"
-             f"{{entry=\"pool_decode\"}} == {traces[key]} (expected 1)")
+    for lab, v in sorted(decode.items()):
+        _require(v == 1,
+                 f"one-decode-trace contract broken on {dict(lab)}: "
+                 f"jit_traces == {v} (expected 1)")
+    if expect_ranks > 0:
+        ranks = {dict(lab).get("rank") for lab in decode}
+        want = {str(r) for r in range(expect_ranks)}
+        _require(ranks == want,
+                 f"metrics: decode-contract rank labels {sorted(ranks, key=str)} "
+                 f"!= expected ranks {sorted(want)}")
     budgets = _series(doc, "gauges", "jit_trace_budget")
     for lab, n in traces.items():
         budget = budgets.get(lab, -1)
@@ -190,13 +208,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-decode-contract", action="store_true",
                     help="skip the jit_traces{entry=pool_decode}==1 check "
                          "(for exports from non-engine paths)")
+    ap.add_argument("--expect-ranks", type=int, default=0,
+                    help="require a merged multi-rank export with exactly "
+                         "this many rank labels on the decode-contract "
+                         "series (0 = don't check rank structure)")
     args = ap.parse_args(argv)
     try:
         with open(args.metrics) as f:
             metrics = json.load(f)
         check_metrics_schema(metrics)
         if not args.no_decode_contract:
-            check_decode_contract(metrics)
+            check_decode_contract(metrics, expect_ranks=args.expect_ranks)
         n_chips = check_energy_reconciliation(metrics)
         n_events = 0
         if args.trace:

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # CI tiers for the NeuRRAM reproduction.
 #
-#   tools/ci.sh            fast tier: lint + pytest -m "not slow" + bench-smoke
+#   tools/ci.sh            fast tier: lint + pytest -m "not slow" + smokes
 #   tools/ci.sh full       tier-1:    the whole suite, slow tests included
 #   tools/ci.sh bench      bench-smoke only (writes BENCH_mapping.json)
 #   tools/ci.sh lint       static analysis only: the AST jit-hygiene lint
@@ -42,16 +42,22 @@
 # traffic path with every telemetry output on (metrics JSON/Prometheus,
 # Chrome trace, summary, strict jit watchdog) and schema-validates the
 # exported files with tools/check_obs.py (decode-trace contract + exact
-# chip-energy reconciliation), and a serving-bench-smoke that
+# chip-energy reconciliation), a dist-serve-smoke that serves one seeded
+# stream through a REAL 2-process jax.distributed group (launch/env
+# launcher, per-rank TP-2 replica engines, round-robin request routing,
+# rank-0 KV-store gather + merged rank-labeled metrics validated by
+# check_obs --expect-ranks 2), and a serving-bench-smoke that
 # runs benchmarks/bench_serving.py in quick mode (continuous vs static
-# serving of one seeded stream) into BENCH_serving.json.
+# serving of one seeded stream, plus the 1-vs-2-data-replica scaling
+# rows) into BENCH_serving.json.
 # The bench gate is split by determinism: the
 # one-trace-per-plan contract always fails the run (fused/partial
 # scheduled rows included), while the wall-clock gates — "scheduled no
 # slower than 2x packed on unmerged plans" AND "sched_fused strictly
 # faster than sched_partial on merged plans" (the fused-reduction perf
-# claim) — are warnings in the fast tier (shared CI machines make timing
-# gates flaky) and only enforced in the dedicated bench tier.
+# claim) AND "2-replica aggregate tok/s strictly above 1-replica" (the
+# scale-out claim) — are warnings in the fast tier (shared CI machines
+# make timing gates flaky) and only enforced in the dedicated bench tier.
 # The slow tier adds the pulse-level write-verify simulator,
 # chip-in-the-loop fine-tuning and the end-to-end train/serve drivers
 # (several minutes of simulated physics).
@@ -136,6 +142,23 @@ metrics_smoke() {
     --trace OBS_trace.json
 }
 
+dist_serve_smoke() {
+  echo "== dist-serve-smoke: 2-process data-parallel traffic serving =="
+  # a REAL jax.distributed group: 2 ranks x 2 forced host devices, each
+  # rank a TP-2 replica engine serving its routed share of one seeded
+  # stream (launch/distributed.route_requests); per-rank one-decode-trace
+  # contract asserted in-process, rank 0 gathers + merges the per-rank
+  # summaries/metrics through the coordinator KV store and writes the
+  # fleet files, which check_obs re-validates per rank label
+  python -m repro.launch.env --procs 2 --host-devices 2 -- \
+    python -m repro.launch.serve --smoke --cim --traffic \
+    --arch gemma2-9b --requests 6 --slots 2 --prompt-len 64 --gen 4 \
+    --rate 200 --metrics-out OBS_dist_metrics.json \
+    --prom-out OBS_dist_metrics.prom --summary-out OBS_dist_summary.json
+  python tools/check_obs.py --metrics OBS_dist_metrics.json \
+    --expect-ranks 2
+}
+
 serving_bench_smoke() {
   echo "== serving-bench-smoke: continuous vs static traffic =="
   # one seeded request stream served twice (slotted pool vs static
@@ -156,6 +179,7 @@ case "$tier" in
     recover_smoke
     traffic_smoke
     metrics_smoke
+    dist_serve_smoke
     serving_bench_smoke
     ;;
   full) exec python -m pytest -x -q ;;
